@@ -1,0 +1,50 @@
+"""Benchmark aggregator: one section per paper table/figure + framework
+micro-benches. ``python -m benchmarks.run [--quick]``"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def section(title: str):
+    print(f"\n{'='*70}\n== {title}\n{'='*70}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer seeds")
+    args = ap.parse_args()
+    seeds = 2 if args.quick else 5
+    t0 = time.time()
+
+    from benchmarks import fig1
+
+    section("Fig. 1a/1d — completion time & cost vs JOB LENGTH (P/F/O)")
+    rc = fig1.main(["--axis", "length", "--seeds", str(seeds)])
+
+    section("Fig. 1b/1e — vs MEMORY FOOTPRINT")
+    rc |= fig1.main(["--axis", "memory", "--seeds", str(seeds)])
+
+    section("Fig. 1c/1f — vs REVOCATION COUNT")
+    rc |= fig1.main(["--axis", "revocations", "--seeds", str(seeds)])
+
+    section("Price-ratio sensitivity (threats-to-validity, beyond paper)")
+    fig1.main(["--axis", "revocations", "--seeds", str(seeds), "--ratio-sweep"])
+
+    section("Kernel micro-benchmarks (XLA paths + interpret-mode checks)")
+    from benchmarks import kernels_bench
+
+    kernels_bench.main()
+
+    section("Spot-training orchestrator goodput (real JAX training)")
+    from benchmarks import orchestrator_bench
+
+    orchestrator_bench.main(quick=args.quick)
+
+    print(f"\n# benchmarks done in {time.time()-t0:.0f}s, fig1 orderings rc={rc}")
+    if rc:
+        raise SystemExit(rc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Live revocation + restore demo: the SpotTrainingOrchestrator drives a
+real (reduced) training run in all three modes and prints the goodput/cost
+ledger — the paper's provisioning layer on top of this framework's
+execution layer.
+
+    PYTHONPATH=src python examples/elastic_training.py [--steps 60]
+"""
+import argparse
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.config import TrainConfig, get_arch
+from repro.core import generate_markets, split_history_future
+from repro.core.orchestrator import SpotTrainingOrchestrator
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch("qwen3-4b").reduced()
+    model = build_model(cfg)
+    ds = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=4, seed=args.seed)
+    mesh = make_host_mesh()
+    ms = generate_markets(seed=3, n_hours=24 * 90 + 24 * 30)
+    hist, fut = split_history_future(ms, 24 * 90)
+    tc = TrainConfig(total_steps=args.steps * 2, warmup_steps=5)
+
+    print(f"{'mode':12s} {'useful':>6s} {'wasted':>6s} {'revs':>4s} {'goodput':>7s} "
+          f"{'cost_$':>8s} {'markets'}")
+    for mode in ("siwoft", "checkpoint", "hybrid"):
+        with tempfile.TemporaryDirectory() as d:
+            orch = SpotTrainingOrchestrator(
+                model, ds, mesh, hist, fut, mode=mode, tc=tc,
+                segment_steps=10, steps_per_trace_hour=200,
+                ckpt_dir=d, ckpt_every=5, ft_revocations=2, seed=args.seed,
+            )
+            rep = orch.run(args.steps)
+        print(f"{mode:12s} {rep.useful_steps:6d} {rep.wasted_steps:6d} "
+              f"{rep.revocations:4d} {rep.goodput:7.2f} {rep.cost_dollars:8.4f} "
+              f"{rep.markets_used}")
+    print("\nsiwoft re-provisions uncorrelated high-MTTR markets (no FT overhead);")
+    print("checkpoint pays ckpt+restore+re-execution; hybrid combines both wins.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Batched serving: prefill a batch of prompts, then decode greedily with
+the ring-buffer KV cache — the serve path the decode_* dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mixtral-8x7b --new-tokens 16
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch
+from repro.models import build_model
+from repro.models.transformer import RunOpts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    opts = RunOpts()
+
+    B, S = args.batch, args.prompt_len
+    prompts = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.vision_tokens:
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16
+        )
+
+    total = S + args.new_tokens
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, total, opts)
+    )(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos, opts))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={S} new={args.new_tokens}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
+          f"{t_decode/max(args.new_tokens-1,1)*1e3:.1f} ms/token")
+    print("generated token ids (first row):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Typed configuration system for the spotax framework.
+
+Everything the launcher, dry-run, and tests consume is a frozen dataclass
+defined here; architecture files under ``repro.configs`` register instances
+into the global registry.
+"""
+from repro.config.base import (
+    AttentionKind,
+    BlockKind,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    TrainConfig,
+    ShardingLayout,
+)
+from repro.config.registry import (
+    get_arch,
+    get_shape,
+    list_archs,
+    list_shapes,
+    register_arch,
+    runnable_cells,
+    SHAPES,
+)
+
+__all__ = [
+    "AttentionKind",
+    "BlockKind",
+    "InputShape",
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "TrainConfig",
+    "ShardingLayout",
+    "get_arch",
+    "get_shape",
+    "list_archs",
+    "list_shapes",
+    "register_arch",
+    "runnable_cells",
+    "SHAPES",
+]

@@ -1,0 +1,6 @@
+"""Assigned architecture configs.
+
+One module per architecture id (module names sanitize ``.``/``-`` to ``_``;
+the registered arch id is exact). Importing ``repro.config`` registry APIs
+auto-loads every module here.
+"""

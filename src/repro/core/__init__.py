@@ -1,0 +1,39 @@
+"""THE PAPER: P-SIWOFT — provisioning spot instances without fault-tolerance
+mechanisms (Alourani & Kshemkalyani, ISPDC 2020).
+
+market.py       spot markets, price traces, MTTR / correlation features
+provisioner.py  Algorithm 1, step-for-step
+policies.py     P-SIWOFT + FT baselines (checkpoint / migration / replication)
+simulator.py    discrete-event executor reproducing Fig. 1
+accounting.py   per-billing-cycle cost/time breakdowns
+orchestrator.py bridges the provisioner to the real JAX training loop
+"""
+from repro.core.market import (
+    Market,
+    MarketSet,
+    generate_markets,
+    load_csv_traces,
+    revocation_probability,
+    split_history_future,
+)
+from repro.core.policies import (
+    CheckpointPolicy,
+    Job,
+    MigrationPolicy,
+    OnDemandPolicy,
+    OverheadModel,
+    ReplicationPolicy,
+    SiwoftPolicy,
+)
+from repro.core.portfolio import PortfolioPolicy
+from repro.core.provisioner import MarketFeatures
+from repro.core.simulator import Simulator
+from repro.core.accounting import Breakdown
+
+__all__ = [
+    "Market", "MarketSet", "generate_markets", "load_csv_traces",
+    "revocation_probability", "split_history_future",
+    "CheckpointPolicy", "Job", "MigrationPolicy", "OnDemandPolicy",
+    "OverheadModel", "ReplicationPolicy", "SiwoftPolicy",
+    "MarketFeatures", "PortfolioPolicy", "Simulator", "Breakdown",
+]

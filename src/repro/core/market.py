@@ -1,0 +1,227 @@
+"""Cloud spot markets: instance types, price traces, and the three market
+features P-SIWOFT consumes (§III-A of the paper):
+
+1. **lifetime / MTTR** — mean time until the spot price rises above the
+   corresponding on-demand price (the paper's revocation proxy: customers
+   won't bid above on-demand),
+2. **revocation probability** of a provisioned instance
+   = job_length / MTTR,
+3. **revocation correlation** between markets — how often two markets
+   revoked in the *same hourly billing cycle* over the past three months.
+
+The paper collects real EC2 REST price traces; offline we generate
+synthetic traces calibrated to the stylized facts the paper and its
+citations report (spot ≈ 10–40 % of on-demand; *rare-revocation markets
+exist* with MTTR > 600 h [Sharma et al., HotCloud'16]; revocations are
+correlated within an availability zone and nearly independent across
+zones/regions [Sharma et al. 2017]). A CSV loader accepts real traces.
+Everything is seeded and deterministic.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+HOURS_3_MONTHS = 24 * 90  # one billing cycle per hour, 3-month feature window
+
+# EC2-ish instance menu: (type, memory GiB, on-demand $/h). The last row is
+# the paper's experiment instance (m5ad.12xlarge, 48 vCPU / 192 GiB).
+INSTANCE_MENU: Tuple[Tuple[str, int, float], ...] = (
+    ("m5.large", 8, 0.096),
+    ("m5.xlarge", 16, 0.192),
+    ("m5.2xlarge", 32, 0.384),
+    ("m5.4xlarge", 64, 0.768),
+    ("m5.8xlarge", 128, 1.536),
+    ("m5ad.12xlarge", 192, 2.472),
+)
+
+# 6 regions × 4 AZs = 24 markets per instance type. EC2 reality is ~75+;
+# what matters for the paper's premise is that P(no rare-revocation market
+# exists for a type) is negligible (0.75^24 ≈ 0.1 % here vs 3 % at 12).
+REGIONS = (
+    "us-east-1", "us-west-2", "eu-west-1",
+    "ap-southeast-1", "ap-northeast-1", "eu-central-1",
+)
+ZONES_PER_REGION = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Market:
+    """One (instance type × availability zone) spot market."""
+
+    market_id: int
+    instance_type: str
+    region: str
+    zone: str
+    memory_gb: int
+    on_demand_price: float
+
+
+@dataclasses.dataclass
+class MarketSet:
+    """Markets + their hourly price traces (rows: market, cols: hour)."""
+
+    markets: List[Market]
+    prices: np.ndarray          # (n_markets, n_hours) $/h spot price
+    start_hour: int = 0
+
+    @property
+    def n_hours(self) -> int:
+        return self.prices.shape[1]
+
+    def revocation_matrix(self) -> np.ndarray:
+        """bool (n_markets, n_hours): hour h is a revocation hour for market m
+        iff spot price > on-demand price (the paper's proxy)."""
+        od = np.array([m.on_demand_price for m in self.markets])[:, None]
+        return self.prices > od
+
+    # ---- feature 1: lifetime / MTTR ------------------------------------
+    def mttr_hours(self) -> np.ndarray:
+        """Mean time between revocation events per market, in hours.
+
+        Markets with zero revocations in the window get MTTR = n_hours × 2
+        (">600 h" rare-revocation markets for a 3-month window)."""
+        rev = self.revocation_matrix()
+        counts = rev.sum(axis=1)
+        with np.errstate(divide="ignore"):
+            mttr = self.n_hours / np.maximum(counts, 1)
+        mttr[counts == 0] = 2.0 * self.n_hours
+        return mttr
+
+    # ---- feature 3: revocation correlation -----------------------------
+    def correlation_matrix(self) -> np.ndarray:
+        """Jaccard co-revocation: |hours both revoked| / |hours either|.
+
+        0 for pairs that never co-revoke (including never-revoking markets);
+        1 on the diagonal for markets that ever revoke."""
+        rev = self.revocation_matrix().astype(np.float64)
+        inter = rev @ rev.T
+        counts = rev.sum(axis=1)
+        union = counts[:, None] + counts[None, :] - inter
+        with np.errstate(divide="ignore", invalid="ignore"):
+            corr = np.where(union > 0, inter / np.maximum(union, 1e-12), 0.0)
+        return corr
+
+    def spot_price(self, market_id: int, hour: int) -> float:
+        h = min(int(hour), self.n_hours - 1)
+        return float(self.prices[market_id, h])
+
+
+def revocation_probability(job_length_hours: float, mttr_hours: float) -> float:
+    """Paper §III-A / Alg.1 step 9: estimated revocation probability of a
+    provisioned instance = job length / MTTR (clipped to [0, 1])."""
+    if mttr_hours <= 0:
+        return 1.0
+    return float(min(1.0, job_length_hours / mttr_hours))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic trace generator
+# ---------------------------------------------------------------------------
+
+def generate_markets(
+    *,
+    seed: int = 0,
+    n_hours: int = HOURS_3_MONTHS,
+    regions: Sequence[str] = REGIONS,
+    zones_per_region: int = ZONES_PER_REGION,
+    menu: Sequence[Tuple[str, int, float]] = INSTANCE_MENU,
+    rare_market_fraction: float = 0.25,
+) -> MarketSet:
+    """Markets = |regions| × zones × |menu|; hourly prices for ``n_hours``.
+
+    Price process per market: base spot ratio ~ U(0.15, 0.40) of on-demand
+    with AR(1) jitter, plus *spike* processes that push the price above
+    on-demand (a revocation hour):
+
+    * market-local spikes: Poisson with rate drawn per market; a
+      ``rare_market_fraction`` of markets get rate ≈ 0 (the MTTR > 600 h
+      markets the paper's key idea relies on),
+    * zone-shared spikes: a per-zone shock hits every market in that zone
+      (intra-zone revocation correlation; across zones independent).
+    """
+    rng = np.random.default_rng(seed)
+    markets: List[Market] = []
+    mid = 0
+    for region in regions:
+        for z in range(zones_per_region):
+            zone = f"{region}{chr(ord('a') + z)}"
+            for (itype, mem, od) in menu:
+                markets.append(Market(mid, itype, region, zone, mem, od))
+                mid += 1
+
+    n = len(markets)
+    prices = np.empty((n, n_hours))
+
+    # zone-shared spike trains (same-hour revocations within a zone)
+    zones = sorted({m.zone for m in markets})
+    zone_rate = {z: rng.uniform(0.0005, 0.004) for z in zones}
+    zone_spikes = {
+        z: rng.random(n_hours) < zone_rate[z] for z in zones
+    }
+
+    for i, m in enumerate(markets):
+        # EC2 spot discounts average 60–70 % off on-demand, but the paper's
+        # F ≥ O cost ordering (Fig. 1d–f) implies its traces sat at the
+        # shallow end; we default to U(0.55, 0.80) and ship a sensitivity
+        # sweep over the ratio (benchmarks/fig1.py --ratio-sweep).
+        base_ratio = rng.uniform(0.55, 0.80)
+        # AR(1) mean-reverting jitter around the base ratio
+        noise = np.empty(n_hours)
+        x = 0.0
+        phi, sig = 0.97, 0.015
+        eps = rng.normal(0.0, sig, n_hours)
+        for h in range(n_hours):
+            x = phi * x + eps[h]
+            noise[h] = x
+        ratio = np.clip(base_ratio + noise, 0.05, 0.95)
+
+        rare = rng.random() < rare_market_fraction
+        local_rate = 0.0 if rare else rng.uniform(0.001, 0.02)
+        local_spikes = rng.random(n_hours) < local_rate
+        spikes = local_spikes | zone_spikes[m.zone]
+        if rare:
+            # rare markets ignore even most zone shocks (deeper capacity pool)
+            spikes = local_spikes | (zone_spikes[m.zone] & (rng.random(n_hours) < 0.1))
+
+        price = ratio * m.on_demand_price
+        spike_mult = rng.uniform(1.05, 1.6, n_hours)
+        price = np.where(spikes, m.on_demand_price * spike_mult, price)
+        prices[i] = price
+    return MarketSet(markets=markets, prices=prices)
+
+
+def split_history_future(ms: MarketSet, history_hours: int) -> Tuple[MarketSet, MarketSet]:
+    """Features are computed on the past window; jobs run on the future one."""
+    hist = MarketSet(ms.markets, ms.prices[:, :history_hours], start_hour=0)
+    fut = MarketSet(
+        ms.markets, ms.prices[:, history_hours:], start_hour=history_hours
+    )
+    return hist, fut
+
+
+def load_csv_traces(path: str) -> MarketSet:
+    """Real-trace loader: CSV columns = market_id,instance_type,region,zone,
+    memory_gb,on_demand_price,h0,h1,...  (one row per market)."""
+    markets: List[Market] = []
+    rows: List[List[float]] = []
+    with open(path) as f:
+        for rec in csv.reader(f):
+            if rec[0] == "market_id":
+                continue
+            markets.append(
+                Market(
+                    market_id=int(rec[0]),
+                    instance_type=rec[1],
+                    region=rec[2],
+                    zone=rec[3],
+                    memory_gb=int(rec[4]),
+                    on_demand_price=float(rec[5]),
+                )
+            )
+            rows.append([float(x) for x in rec[6:]])
+    return MarketSet(markets=markets, prices=np.asarray(rows))

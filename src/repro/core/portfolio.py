@@ -1,0 +1,88 @@
+"""Beyond-paper: portfolio-driven provisioning (inspired by the paper's own
+related work, Sharma et al., "Portfolio-driven resource management for
+transient cloud servers" — reference [6] of the paper).
+
+P-SIWOFT picks markets greedily by MTTR and only consults the correlation
+feature reactively (AFTER a revocation). The portfolio policy instead
+selects the whole failover chain UP FRONT by a mean-variance-style greedy
+objective that trades expected lifetime against price and against
+co-revocation with markets already in the portfolio:
+
+    score(m | P) = log(MTTR_m) · (1 − max_{p∈P} corr(m, p)) / price_m^γ
+
+Execution semantics are identical to Algorithm 1 (no FT mechanism; restart
+from scratch on revocation) — only the provisioning ORDER differs, so the
+comparison isolates the value of proactive diversification. In calm markets
+(rare-revocation markets exist) the two coincide on the first pick; the
+portfolio wins in volatile regimes where consecutive failovers matter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core import provisioner as alg
+from repro.core.policies import Job, SiwoftPolicy
+from repro.core.provisioner import MarketFeatures
+
+
+@dataclasses.dataclass(frozen=True)
+class PortfolioPolicy(SiwoftPolicy):
+    name: str = "portfolio"
+    size: int = 4                 # failover-chain length selected up front
+    price_gamma: float = 0.5      # price sensitivity in the greedy score
+    lifetime_factor: float = 2.0
+
+
+def select_portfolio(
+    job: Job, feats: MarketFeatures, policy: PortfolioPolicy
+) -> List[int]:
+    """Greedy diversified failover chain over the suitable markets."""
+    suitable = alg.find_suitable_servers(job, feats)
+    lifetimes = alg.compute_lifetime(feats, suitable)
+    admitted = [
+        i for i in suitable
+        if lifetimes[i] >= policy.lifetime_factor * job.length_hours
+    ] or list(suitable)
+
+    chain: List[int] = []
+    rest = set(admitted)
+    while rest and len(chain) < policy.size:
+        def score(m: int) -> float:
+            div = 1.0
+            if chain:
+                div = 1.0 - max(float(feats.corr[m, p]) for p in chain)
+            price = max(float(feats.avg_price[m]), 1e-9)
+            return math.log(max(lifetimes[m], 1.001)) * max(div, 0.0) / price**policy.price_gamma
+
+        best = max(sorted(rest), key=score)
+        chain.append(best)
+        rest.discard(best)
+    return chain
+
+
+def portfolio_failover_order(
+    job: Job, feats: MarketFeatures, policy: PortfolioPolicy
+) -> List[int]:
+    """The full provisioning order: the portfolio chain, then any remaining
+    suitable markets MTTR-descending (the chain should rarely be exhausted)."""
+    chain = select_portfolio(job, feats, policy)
+    suitable = alg.find_suitable_servers(job, feats)
+    lifetimes = alg.compute_lifetime(feats, suitable)
+    tail = sorted(
+        (i for i in suitable if i not in chain),
+        key=lambda i: (-lifetimes[i], float(feats.avg_price[i]), i),
+    )
+    return chain + tail
+
+
+def max_chain_correlation(feats: MarketFeatures, chain: Sequence[int]) -> float:
+    """Diagnostic: worst pairwise co-revocation within a chain prefix."""
+    worst = 0.0
+    for a in range(len(chain)):
+        for b in range(a + 1, len(chain)):
+            worst = max(worst, float(feats.corr[chain[a], chain[b]]))
+    return worst

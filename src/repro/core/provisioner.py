@@ -1,0 +1,132 @@
+"""P-SIWOFT — Algorithm 1, implemented faithfully step by step.
+
+Function names mirror the paper's pseudocode:
+
+    Step 2   FindSuitableServers(J, R)      -> find_suitable_servers
+    Step 3   ComputeLifeTime(M, U)          -> compute_lifetime
+    Step 5   ServerBasedLifeTime(j, M, L)   -> server_based_lifetime
+    Step 7   Highest(S_j)                   -> highest
+    Step 8   length(s_j) >> length(j)       -> lifetime_admits (MTTR ≥ 2L)
+    Step 9   RevocationProbability(j, s_j)  -> market.revocation_probability
+    Step 13  FindLowCorrelation(j, s_j)     -> find_low_correlation
+    Step 14  S_j ← (S_j \\ {s_j}) ∩ W_{s_j} -> restrict_after_revocation
+
+The paper leaves two situations unspecified; our choices (documented in
+DESIGN.md §Deviations):
+
+* no market passes the MTTR ≥ 2L filter → we keep the MTTR-descending order
+  over all suitable markets (best effort) instead of failing the job;
+* the correlation filter empties S_j → we refill with the remaining
+  suitable markets (minus already-revoked ones), again MTTR-descending.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core.market import MarketSet, revocation_probability
+from repro.core.policies import Job, SiwoftPolicy
+
+
+@dataclasses.dataclass
+class MarketFeatures:
+    """The three §III-A features, computed ONCE from the history window."""
+
+    mttr: np.ndarray          # (n_markets,) hours
+    corr: np.ndarray          # (n_markets, n_markets) co-revocation in [0,1]
+    memory_gb: np.ndarray     # (n_markets,)
+    on_demand: np.ndarray     # (n_markets,)
+    avg_price: np.ndarray     # (n_markets,) mean historical spot price
+
+    @classmethod
+    def from_history(cls, history: MarketSet) -> "MarketFeatures":
+        return cls(
+            mttr=history.mttr_hours(),
+            corr=history.correlation_matrix(),
+            memory_gb=np.array([m.memory_gb for m in history.markets], dtype=float),
+            on_demand=np.array([m.on_demand_price for m in history.markets]),
+            avg_price=history.prices.mean(axis=1),
+        )
+
+
+# --- Alg. 1 steps -----------------------------------------------------------
+
+def find_suitable_servers(job: Job, feats: MarketFeatures) -> List[int]:
+    """Step 2: the paper matches jobs to instance TYPES by memory size; the
+    suitable set is every market of the smallest type that fits the job
+    (bigger types waste money and are not "suitable" in the paper's EC2
+    mapping)."""
+    fits = feats.memory_gb[feats.memory_gb >= job.memory_gb]
+    if fits.size == 0:
+        return []
+    best = fits.min()
+    return [i for i in range(len(feats.memory_gb)) if feats.memory_gb[i] == best]
+
+
+def compute_lifetime(feats: MarketFeatures, suitable: Sequence[int]) -> Dict[int, float]:
+    """Step 3: lifetime (MTTR) per suitable market."""
+    return {i: float(feats.mttr[i]) for i in suitable}
+
+
+def server_based_lifetime(
+    job: Job,
+    lifetimes: Dict[int, float],
+    policy: SiwoftPolicy,
+    feats: Optional[MarketFeatures] = None,
+) -> List[int]:
+    """Step 5: keep markets whose lifetime admits the job (MTTR ≥ 2 × len),
+    sorted by lifetime descending. Ties (e.g. several never-revoking
+    markets) break toward the historically cheaper market — the paper does
+    not specify tie-breaking; see module docstring. Falls back to all
+    candidates (still MTTR-descending) when the filter is empty."""
+    admitted = [
+        i for i, lt in lifetimes.items()
+        if lt >= policy.lifetime_factor * job.length_hours
+    ]
+    pool = admitted if admitted else list(lifetimes)
+    price = (lambda i: float(feats.avg_price[i])) if feats is not None else (lambda i: 0.0)
+    return sorted(pool, key=lambda i: (-lifetimes[i], price(i), i))
+
+
+def highest(S: Sequence[int]) -> int:
+    """Step 7: S is kept lifetime-descending; the head is the highest."""
+    return S[0]
+
+
+def lifetime_admits(job: Job, lifetime: float, policy: SiwoftPolicy) -> bool:
+    """Step 8 guard."""
+    return lifetime >= policy.lifetime_factor * job.length_hours
+
+
+def find_low_correlation(
+    feats: MarketFeatures, revoked_market: int, policy: SiwoftPolicy
+) -> Set[int]:
+    """Step 13: markets whose co-revocation with the revoked market over the
+    3-month history is below the threshold."""
+    corr = feats.corr[revoked_market]
+    return {i for i in range(corr.shape[0]) if corr[i] < policy.correlation_threshold}
+
+
+def restrict_after_revocation(
+    S: List[int],
+    revoked: int,
+    W: Set[int],
+    lifetimes: Dict[int, float],
+    already_revoked: Set[int],
+    feats: Optional[MarketFeatures] = None,
+) -> List[int]:
+    """Step 14 (+ fallback): S ← (S \\ {s}) ∩ W, lifetime-descending."""
+    rest = [i for i in S if i != revoked and i in W]
+    if not rest:
+        rest = [i for i in lifetimes if i not in already_revoked and i != revoked]
+    price = (lambda i: float(feats.avg_price[i])) if feats is not None else (lambda i: 0.0)
+    return sorted(rest, key=lambda i: (-lifetimes[i], price(i), i))
+
+
+def plan_first_choice(job: Job, feats: MarketFeatures, policy: SiwoftPolicy) -> int:
+    """Convenience: the market Alg. 1 provisions first for this job."""
+    suitable = find_suitable_servers(job, feats)
+    lifetimes = compute_lifetime(feats, suitable)
+    return highest(server_based_lifetime(job, lifetimes, policy))

@@ -1,0 +1,397 @@
+"""Discrete-event simulator for jobs on spot markets (paper §IV–§V).
+
+Methodology mirrors the paper exactly:
+
+* fault-tolerance baselines receive a FIXED, seeded number of revocations
+  placed uniformly over the job's compute progress ("we randomly send a
+  fixed number of revocations per day of the job's execution length"),
+* P-SIWOFT's revocations are TRACE-DRIVEN: the provisioned market revokes
+  at the first future hour whose spot price exceeds on-demand (the same
+  proxy its MTTR feature is built on) — markets chosen by Algorithm 1
+  rarely hit one,
+* costs accrue per hourly billing cycle at the hour's spot price, and the
+  unused tail of each started cycle is charged to ``billing_buffer``,
+* time/cost decompose into the paper's stacked components (execution,
+  re-execution, checkpointing, recovery, startup, buffer).
+
+Progress-based classification: ``max_progress`` tracks the furthest point
+ever computed; any compute below it re-done after a revocation counts as
+``re_execution``, first-time compute counts as ``execution`` (so execution
+always totals the job length, and overhead is visible separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import provisioner as alg
+from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.market import MarketSet, revocation_probability
+from repro.core.policies import (
+    CheckpointPolicy,
+    Job,
+    MigrationPolicy,
+    OnDemandPolicy,
+    OverheadModel,
+    ReplicationPolicy,
+    SiwoftPolicy,
+)
+
+MAX_ATTEMPTS = 1000  # hard stop for pathological market sets
+
+
+class Simulator:
+    def __init__(
+        self,
+        history: MarketSet,
+        future: MarketSet,
+        overheads: OverheadModel = OverheadModel(),
+        seed: int = 0,
+    ):
+        self.history = history
+        self.future = future
+        self.ov = overheads
+        self.seed = seed
+        self.feats = alg.MarketFeatures.from_history(history)
+        self._rev_matrix = future.revocation_matrix()
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _price(self, market_id: int, hour: float) -> float:
+        h = min(int(hour), self.future.n_hours - 1)
+        return float(self.future.prices[market_id, h])
+
+    def _od_price(self, job: Job) -> float:
+        """Cheapest on-demand instance that fits the job."""
+        fit = [m for m in self.future.markets if m.memory_gb >= job.memory_gb]
+        return min(m.on_demand_price for m in fit)
+
+    def _select_ft_market(
+        self, job: Job, wall: float, exclude: Set[int], mode: str, salt: int
+    ) -> int:
+        """FT-baseline market choice: "random" (paper: no market
+        intelligence) or "cheapest" (price-aware variant)."""
+        hour = min(int(wall), self.future.n_hours - 1)
+        cands = [i for i in alg.find_suitable_servers(job, self.feats) if i not in exclude]
+        if not cands:
+            cands = alg.find_suitable_servers(job, self.feats)
+        if mode == "cheapest":
+            return min(cands, key=lambda i: self.future.prices[i, hour])
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed, spawn_key=(job.job_id, salt, len(exclude)))
+        )
+        return int(cands[rng.integers(len(cands))])
+
+    def _next_trace_revocation(self, market_id: int, wall: float) -> Optional[float]:
+        """First revocation hour ≥ wall in the future window (None if none)."""
+        h0 = int(math.ceil(wall))
+        rev = self._rev_matrix[market_id, h0:]
+        idx = np.argmax(rev)
+        if not rev.any():
+            return None
+        return float(h0 + idx)
+
+    def _ft_revocation_points(self, job: Job, n: int, salt: int) -> List[float]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed, spawn_key=(job.job_id, salt))
+        )
+        return sorted(rng.uniform(0.0, job.length_hours, size=n).tolist())
+
+    # ------------------------------------------------------------------
+    # policies
+    # ------------------------------------------------------------------
+    def run_job(
+        self,
+        job: Job,
+        policy,
+        n_revocations: int = 0,
+        start_wall: float = 0.0,
+    ) -> Breakdown:
+        from repro.core.portfolio import PortfolioPolicy
+
+        if isinstance(policy, PortfolioPolicy):
+            bd = self._run_portfolio(job, policy, start_wall)
+        elif isinstance(policy, SiwoftPolicy):
+            bd = self._run_siwoft(job, policy, start_wall)
+        elif isinstance(policy, CheckpointPolicy):
+            bd = self._run_checkpoint(job, policy, n_revocations, start_wall)
+        elif isinstance(policy, MigrationPolicy):
+            bd = self._run_migration(job, policy, n_revocations, start_wall)
+        elif isinstance(policy, ReplicationPolicy):
+            bd = self._run_replication(job, policy, n_revocations, start_wall)
+        elif isinstance(policy, OnDemandPolicy):
+            bd = self._run_on_demand(job, start_wall)
+        else:
+            raise TypeError(policy)
+        if bd.wall_time == 0.0:
+            bd.wall_time = bd.total_time
+        return bd
+
+    def run_jobs(self, jobs: Sequence[Job], policy, n_revocations: int = 0) -> Breakdown:
+        """Alg. 1 steps 4–20: totals over the job set (step 19/21)."""
+        total = Breakdown()
+        for job in jobs:
+            total.add(self.run_job(job, policy, n_revocations=n_revocations))
+        return total
+
+    # --- P-SIWOFT ------------------------------------------------------
+    def _run_siwoft(self, job: Job, policy: SiwoftPolicy, start_wall: float) -> Breakdown:
+        bd = Breakdown()
+        suitable = alg.find_suitable_servers(job, self.feats)          # step 2
+        lifetimes = alg.compute_lifetime(self.feats, suitable)         # step 3
+        S = alg.server_based_lifetime(job, lifetimes, policy, self.feats)  # step 5
+        wall = start_wall
+        max_progress = 0.0
+        last_ckpt = 0.0  # only advances in the beyond-paper hybrid mode
+        revoked: Set[int] = set()
+
+        for _ in range(MAX_ATTEMPTS):                                  # step 6
+            s = alg.highest(S)                                         # step 7
+            v = revocation_probability(job.length_hours, lifetimes.get(s, 1e-9))  # step 9
+            session = Session(s, wall)
+            session.add("startup", self.ov.startup_hours)              # provision (step 10)
+            resume_from = last_ckpt if policy.uses_checkpoints else 0.0
+            if policy.uses_checkpoints and resume_from > 0:
+                session.add("recovery", self.ov.restore_hours(job.memory_gb))
+
+            t_rev = self._next_trace_revocation(s, wall)               # step 11 driver
+            compute_start = wall + session.used_hours
+            progress = resume_from
+
+            def run_until(target_progress: float, available: float) -> Tuple[float, float]:
+                """Advance ≤ available hours toward target; returns (new
+                progress, hours spent) split into exec/re-exec components."""
+                nonlocal max_progress
+                span = min(target_progress - progress, available)
+                if span <= 0:
+                    return progress, 0.0
+                redo = max(0.0, min(max_progress, progress + span) - progress)
+                fresh = span - redo
+                if redo > 0:
+                    session.add("re_execution", redo)
+                if fresh > 0:
+                    session.add("execution", fresh)
+                max_progress = max(max_progress, progress + span)
+                return progress + span, span
+
+            if policy.uses_checkpoints:
+                # hybrid (beyond paper): periodic checkpoints while running
+                horizon = math.inf if t_rev is None else t_rev - compute_start
+                t_used = 0.0
+                while progress < job.length_hours and t_used < horizon:
+                    next_stop = min(last_ckpt + policy.ckpt_interval_hours, job.length_hours)
+                    progress, spent = run_until(next_stop, horizon - t_used)
+                    t_used += spent
+                    if progress >= next_stop and progress < job.length_hours:
+                        ck = self.ov.ckpt_hours(job.memory_gb)
+                        if t_used + ck > horizon:
+                            break
+                        session.add("checkpointing", ck)
+                        t_used += ck
+                        last_ckpt = progress
+                    if progress >= job.length_hours:
+                        break
+            else:
+                horizon = math.inf if t_rev is None else t_rev - compute_start
+                progress, _ = run_until(job.length_hours, horizon)
+
+            wall_used = bill_session(session, self._price, bd)
+            wall += wall_used
+            if progress >= job.length_hours:                            # step 18
+                return bd
+            # revocation (steps 11–15): lose everything since last_ckpt
+            bd.revocations += 1
+            revoked.add(s)
+            W = alg.find_low_correlation(self.feats, s, policy)         # step 13
+            S = alg.restrict_after_revocation(S, s, W, lifetimes, revoked, self.feats)  # step 14
+            wall = max(wall, 0.0 if t_rev is None else t_rev)
+        raise RuntimeError("siwoft: exceeded MAX_ATTEMPTS")
+
+    # --- beyond-paper: portfolio failover chain ---------------------------
+    def _run_portfolio(self, job: Job, policy, start_wall: float) -> Breakdown:
+        """Same no-FT execution as P-SIWOFT; provisioning order is the
+        proactively diversified portfolio chain (core/portfolio.py)."""
+        from repro.core.portfolio import portfolio_failover_order
+
+        bd = Breakdown()
+        order = portfolio_failover_order(job, self.feats, policy)
+        wall = start_wall
+        max_progress = 0.0
+        for s_m in order:
+            session = Session(s_m, wall)
+            session.add("startup", self.ov.startup_hours)
+            t_rev = self._next_trace_revocation(s_m, wall)
+            compute_start = wall + session.used_hours
+            horizon = math.inf if t_rev is None else t_rev - compute_start
+            span = min(job.length_hours, max(horizon, 0.0))
+            redo = min(max_progress, span)
+            if redo > 0:
+                session.add("re_execution", redo)
+            if span - redo > 0:
+                session.add("execution", span - redo)
+            max_progress = max(max_progress, span)
+            wall += bill_session(session, self._price, bd)
+            if span >= job.length_hours:
+                return bd
+            bd.revocations += 1
+            wall = max(wall, 0.0 if t_rev is None else t_rev)
+        raise RuntimeError("portfolio: exhausted every market")
+
+    # --- FT baseline: checkpointing -------------------------------------
+    def _run_checkpoint(
+        self, job: Job, policy: CheckpointPolicy, n_rev: int, start_wall: float
+    ) -> Breakdown:
+        bd = Breakdown()
+        rev_points = self._ft_revocation_points(job, n_rev, salt=1)
+        wall = start_wall
+        progress = 0.0
+        max_progress = 0.0
+        last_ckpt = 0.0
+        revoked: Set[int] = set()
+        rev_iter = iter(rev_points + [math.inf])
+        next_rev = next(rev_iter)
+        first = True
+
+        for _ in range(MAX_ATTEMPTS):
+            m = self._select_ft_market(job, wall, revoked, policy.market_selection, salt=11)
+            session = Session(m, wall)
+            session.add("startup", self.ov.startup_hours)
+            if not first:
+                session.add("recovery", self.ov.restore_hours(job.memory_gb))
+            first = False
+
+            # run until either completion or the next injected revocation
+            while progress < job.length_hours and progress < next_rev:
+                stop = min(
+                    last_ckpt + policy.ckpt_interval_hours,
+                    job.length_hours,
+                    next_rev,
+                )
+                span = stop - progress
+                redo = max(0.0, min(max_progress, stop) - progress)
+                fresh = span - redo
+                if redo > 0:
+                    session.add("re_execution", redo)
+                if fresh > 0:
+                    session.add("execution", fresh)
+                max_progress = max(max_progress, stop)
+                progress = stop
+                if (
+                    progress >= last_ckpt + policy.ckpt_interval_hours
+                    and progress < job.length_hours
+                    and progress < next_rev
+                ):
+                    session.add("checkpointing", self.ov.ckpt_hours(job.memory_gb))
+                    last_ckpt = progress
+
+            wall += bill_session(session, self._price, bd)
+            if progress >= job.length_hours:
+                return bd
+            # revocation: roll back to the last checkpoint
+            bd.revocations += 1
+            revoked.add(m)
+            progress = last_ckpt
+            next_rev = next(rev_iter)
+        raise RuntimeError("checkpoint: exceeded MAX_ATTEMPTS")
+
+    # --- FT baseline: migration ----------------------------------------
+    def _run_migration(
+        self, job: Job, policy: MigrationPolicy, n_rev: int, start_wall: float
+    ) -> Breakdown:
+        bd = Breakdown()
+        rev_points = self._ft_revocation_points(job, n_rev, salt=2)
+        wall = start_wall
+        progress = 0.0
+        max_progress = 0.0
+        revoked: Set[int] = set()
+        rev_iter = iter(rev_points + [math.inf])
+        next_rev = next(rev_iter)
+        mig_ok = (
+            job.memory_gb <= self.ov.live_migration_max_gb
+            and self.ov.migration_hours(job.memory_gb) <= self.ov.revocation_notice_hours
+        )
+
+        for _ in range(MAX_ATTEMPTS):
+            m = self._select_ft_market(job, wall, revoked, policy.market_selection, salt=12)
+            session = Session(m, wall)
+            session.add("startup", self.ov.startup_hours)
+            span = min(job.length_hours, next_rev) - progress
+            redo = max(0.0, min(max_progress, progress + span) - progress)
+            if redo > 0:
+                session.add("re_execution", redo)
+            if span - redo > 0:
+                session.add("execution", span - redo)
+            max_progress = max(max_progress, progress + span)
+            progress += span
+            if progress >= job.length_hours:
+                wall += bill_session(session, self._price, bd)
+                return bd
+            # revocation with 2-minute notice
+            bd.revocations += 1
+            revoked.add(m)
+            if mig_ok:
+                session.add("recovery", self.ov.migration_hours(job.memory_gb))
+                # state moves: no lost work
+            else:
+                progress = 0.0  # unplanned kill: no FT state to resume from
+            wall += bill_session(session, self._price, bd)
+            next_rev = next(rev_iter)
+        raise RuntimeError("migration: exceeded MAX_ATTEMPTS")
+
+    # --- FT baseline: replication ---------------------------------------
+    def _run_replication(
+        self, job: Job, policy: ReplicationPolicy, n_rev: int, start_wall: float
+    ) -> Breakdown:
+        """Degree-k task duplication: k replicas run the whole job; the n_rev
+        injected revocations each kill one replica (round-robin), which
+        restarts FROM SCRATCH on a fresh market (no state is carried — that
+        is the point of replication). The job completes when the first
+        replica finishes; every other replica-hour is ``re_execution``
+        overhead, which is how replication pays for its fault tolerance."""
+        bd = Breakdown()
+        k = policy.degree
+        kills = self._ft_revocation_points(job, n_rev, salt=3)  # wall offsets
+        # replica r is killed at kills[i] for i ≡ r (mod k)
+        last_kill = [0.0] * k
+        kill_lists: List[List[float]] = [[] for _ in range(k)]
+        for i, t in enumerate(kills):
+            kill_lists[i % k].append(t)
+            last_kill[i % k] = max(last_kill[i % k], t)
+        finish = [lk + job.length_hours for lk in last_kill]
+        winner = int(np.argmin(finish))
+        t_star = finish[winner]
+
+        excl: Set[int] = set()
+        for r in range(k):
+            # sessions: [start, kill_1), [kill_1, kill_2), ..., [last, t*)
+            boundaries = [0.0] + kill_lists[r] + [t_star]
+            for s_i in range(len(boundaries) - 1):
+                t0, t1 = boundaries[s_i], boundaries[s_i + 1]
+                if t1 <= t0:
+                    continue
+                m = self._select_ft_market(job, start_wall + t0, excl, policy.market_selection, salt=13)
+                excl.add(m)
+                session = Session(m, start_wall + t0)
+                session.add("startup", self.ov.startup_hours)
+                run = min(t1 - t0, job.length_hours)
+                is_winning_run = r == winner and s_i == len(boundaries) - 2
+                session.add("execution" if is_winning_run else "re_execution", run)
+                if s_i < len(boundaries) - 2:
+                    bd.revocations += 1
+                bill_session(session, self._price, bd)
+        bd.wall_time = t_star + self.ov.startup_hours
+        return bd
+
+    # --- on-demand reference ---------------------------------------------
+    def _run_on_demand(self, job: Job, start_wall: float) -> Breakdown:
+        bd = Breakdown()
+        price = self._od_price(job)
+        session = Session(-1, start_wall)
+        session.add("startup", self.ov.startup_hours)
+        session.add("execution", job.length_hours)
+        bill_session(session, lambda m, h: price, bd)
+        return bd

@@ -1,0 +1,3 @@
+from repro.data.pipeline import Prefetcher, SyntheticLM
+
+__all__ = ["Prefetcher", "SyntheticLM"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the model zoo's compute hot spots.
+
+flash_attention/  blockwise online-softmax attention (causal, SWA, GQA)
+ssm_scan/         chunked Mamba selective scan
+mlstm/            chunkwise-parallel xLSTM matrix-memory cell
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (public
+jit-able wrapper), ref.py (pure-jnp oracle). Validated with interpret=True
+on CPU; the TPU target uses the same BlockSpecs with VMEM tiling.
+"""
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.mlstm import mlstm, mlstm_chunkwise, mlstm_ref
+from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
+
+__all__ = [
+    "attention_ref", "flash_attention",
+    "mlstm", "mlstm_chunkwise", "mlstm_ref",
+    "ssm_scan", "ssm_scan_ref",
+]

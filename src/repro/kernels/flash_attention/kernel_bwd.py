@@ -1,0 +1,246 @@
+"""Flash-attention backward as two Pallas TPU kernels.
+
+Standard flash backward decomposition (Dao et al., adapted to the TPU's
+sequential grid + VMEM scratch accumulation):
+
+    D_t  = Σ_d do_t ⊙ o_t                              (precomputed outside)
+    p_ij = exp(q_i·k_jᵀ·scale − lse_i)                 (recomputed per tile)
+    dv_j = Σ_i p_ijᵀ · do_i
+    ds   = p ⊙ (do·vᵀ − D) · scale
+    dk_j = Σ_i ds_ijᵀ · q_i
+    dq_i = Σ_j ds_ij · k_j
+
+Kernel A (`_dkdv_kernel`): grid (B, KVH, n_kv, n_q·G) — the innermost dim
+walks (q-block × group) sequentially, accumulating the (block_k, hd) dk/dv
+tiles in VMEM scratch; GQA is handled by folding the group index into the
+inner dim so each KV head's gradient sums over its G query heads without
+ever materializing repeated KV.
+
+Kernel B (`_dq_kernel`): grid (B, H, n_q, n_kv) — accumulates dq over kv
+blocks, mirroring the forward's schedule. Fully-masked tiles are skipped
+with ``pl.when`` in both kernels (same 2× causal saving as the forward).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tile_mask(q_start, k_start, block_q, block_k, causal, window):
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    return mask
+
+
+def _tile_live(q_start, k_start, block_q, block_k, causal, window):
+    live = jnp.bool_(True)
+    if causal:
+        live &= q_start + block_q - 1 >= k_start
+    if window:
+        live &= k_start + block_k - 1 > q_start - window
+    return live
+
+
+def _dkdv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    n_inner: int,
+    q_offset: int,
+    n_q: int,
+):
+    it = pl.program_id(3)            # folded (group, q-block) index
+    qi = it % n_q
+
+    @pl.when(it == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    kj = pl.program_id(2)
+    q_start = q_offset + qi * block_q
+    k_start = kj * block_k
+
+    @pl.when(_tile_live(q_start, k_start, block_q, block_k, causal, window))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)        # (bq, hd)
+        lse = lse_ref[0, 0]                          # (bq, 1)
+        delta = delta_ref[0, 0]                      # (bq, 1)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        mask = _tile_mask(q_start, k_start, block_q, block_k, causal, window)
+        p = jnp.where(mask, jnp.exp(s - lse), 0.0)   # (bq, bk)
+
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * sm_scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(it == n_inner - 1)
+    def _fin():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    dq_scr,
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q_start = q_offset + qi * block_q
+    k_start = kj * block_k
+
+    @pl.when(_tile_live(q_start, k_start, block_q, block_k, causal, window))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        mask = _tile_mask(q_start, k_start, block_q, block_k, causal, window)
+        p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * sm_scale
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kj == n_kv - 1)
+    def _fin():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q: jax.Array,      # (B, H, Sq, hd)
+    k: jax.Array,      # (B, KVH, Skv, hd)
+    v: jax.Array,
+    o: jax.Array,      # (B, H, Sq, hd)   forward output
+    lse: jax.Array,    # (B, H, Sq, 1)    forward log-sum-exp
+    do: jax.Array,     # (B, H, Sq, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (dq, dk, dv) with dk/dv in the (B, KVH, Skv, hd) GQA layout."""
+    B, H, Sq, hd = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    n_q, n_kv = Sq // block_q, Skv // block_k
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(hd)
+
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1, keepdims=True
+    )  # (B, H, Sq, 1)
+
+    # ---- kernel A: dk, dv (grid inner dim folds group × q-block) ----------
+    n_inner = G * n_q
+    dkdv = functools.partial(
+        _dkdv_kernel, sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_inner=n_inner,
+        q_offset=q_offset, n_q=n_q,
+    )
+    # query-head index for a folded inner step: h = kvh * G + it // n_q
+    qmap = lambda b, kvh, kj, it: (b, kvh * G + it // n_q, it % n_q, 0)
+    dk, dv = pl.pallas_call(
+        dkdv,
+        grid=(B, KVH, n_kv, n_inner),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), qmap),                              # q
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, kvh, kj, it: (b, kvh, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, kvh, kj, it: (b, kvh, kj, 0)),
+            pl.BlockSpec((1, 1, block_q, hd), qmap),                              # do
+            pl.BlockSpec((1, 1, block_q, 1), qmap),                               # lse
+            pl.BlockSpec((1, 1, block_q, 1), qmap),                               # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, kvh, kj, it: (b, kvh, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, kvh, kj, it: (b, kvh, kj, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KVH, Skv, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KVH, Skv, hd), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, hd), jnp.float32),
+            pltpu.VMEM((block_k, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # ---- kernel B: dq ------------------------------------------------------
+    dqk = functools.partial(
+        _dq_kernel, sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv=n_kv, q_offset=q_offset,
+    )
+    dq = pl.pallas_call(
+        dqk,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, kj: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, qi, kj: (b, h // G, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, qi, kj: (b, h // G, kj, 0)),
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, kj: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, qi, kj: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, qi, kj: (b, h, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, kj: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

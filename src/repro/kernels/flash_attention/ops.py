@@ -1,0 +1,93 @@
+"""Jitted public wrapper around the flash-attention Pallas kernels.
+
+* accepts the model's (B, S, H, hd) layout, transposes to the kernels'
+  head-major (B, H, S, hd),
+* pads sequence lengths up to block multiples (padded rows/cols are inert:
+  causal masking plus zero cotangents keep them out of every gradient),
+* ``custom_vjp`` wired to the REAL Pallas backward kernels
+  (kernel_bwd.flash_attention_bwd): the forward saves only (q, k, v, o,
+  lse) — O(S·hd), never the S×S probabilities — and the backward recomputes
+  p tile-by-tile in VMEM, accumulating dk/dv over the sequential q-block
+  grid dim and dq over the kv-block dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _fwd_kernel
+from repro.kernels.flash_attention.kernel_bwd import flash_attention_bwd as _bwd_kernel
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _to_head_major_padded(q, k, v, causal, block_q, block_k):
+    Skv = k.shape[1]
+    qm = _pad_to(jnp.moveaxis(q, 2, 1), 2, block_q)      # (B, H, Sq+, hd)
+    km = _pad_to(jnp.moveaxis(k, 2, 1), 2, block_k)
+    vm = _pad_to(jnp.moveaxis(v, 2, 1), 2, block_k)
+    if km.shape[2] != Skv and not causal:
+        raise ValueError("non-causal flash requires block-aligned KV length")
+    return qm, km, vm
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(
+    q: jax.Array,                  # (B, Sq, H, hd)
+    k: jax.Array,                  # (B, Skv, KVH, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    o, _ = _run_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret)
+    return o
+
+
+def _run_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    B, Sq, H, hd = q.shape
+    qm, km, vm = _to_head_major_padded(q, k, v, causal, block_q, block_k)
+    o, lse = _fwd_kernel(
+        qm, km, vm,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.moveaxis(o[:, :, :Sq, :], 1, 2), (qm, km, vm, o, lse)
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    out, res = _run_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret)
+    return out, (res, q.shape, k.shape)
+
+
+def _bwd(causal, window, q_offset, block_q, block_k, interpret, saved, do):
+    (qm, km, vm, o, lse), q_shape, k_shape = saved
+    B, Sq, H, hd = q_shape
+    Skv = k_shape[1]
+    dom = _pad_to(jnp.moveaxis(do, 2, 1), 2, block_q)
+    dq, dk, dv = _bwd_kernel(
+        qm, km, vm, o, lse, dom,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    dq = jnp.moveaxis(dq[:, :, :Sq, :], 1, 2)
+    dk = jnp.moveaxis(dk[:, :, :Skv, :], 1, 2)
+    dv = jnp.moveaxis(dv[:, :, :Skv, :], 1, 2)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)

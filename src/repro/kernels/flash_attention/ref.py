@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (Sq × Skv) score matrix — O(S²) memory, fine at test
+shapes, exact math for allclose sweeps. Supports causal masking, sliding
+windows, and grouped-query attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jax.Array,          # (B, Sq, H, hd)
+    k: jax.Array,          # (B, Skv, KVH, hd)
+    v: jax.Array,          # (B, Skv, KVH, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(hd)
+
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

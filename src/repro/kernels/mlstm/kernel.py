@@ -1,0 +1,150 @@
+"""Chunkwise-parallel mLSTM as a Pallas TPU kernel.
+
+The sequential recurrence (see ref.py) admits an exact chunkwise
+decomposition — the insight that makes the xLSTM matrix memory trainable on
+matmul hardware. Within a chunk (b = cumsum(f̃), inclusive):
+
+    m_t   = b_t + M_t,   M_t = max(m_in, runmax_{s≤t}(ĩ_s − b_s))
+    D_ts  = exp(ĩ_s − b_s − M_t)  for s ≤ t, else 0        (c × c decay)
+    num_t = (q K̂ᵀ ⊙ D) V  +  exp(m_in − M_t) · q · C_in    (all matmuls)
+    n_t   = D K̂  +  exp(m_in − M_t) · n_in
+    h_t   = num_t / max(|n_t · q_t|, 1)
+
+with K̂ = K/√hd; chunk-end carries use the same weights at t = c. Every
+term is a (chunk × chunk) or (chunk × hd) matmul — MXU work — while the
+inter-chunk state (C: hd×hd, n: hd, m: scalar) is carried in VMEM scratch
+across the sequential innermost grid dim, exactly like the flash-attention
+kernel carries its online-softmax state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, g_ref,
+    h_ref, cout_ref, nout_ref, mout_ref,
+    c_scr, n_scr, m_scr,
+    *,
+    chunk: int,
+    n_chunks: int,
+    hd: int,
+):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.zeros_like(m_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (c, hd)
+    k = k_ref[0, 0].astype(jnp.float32) / np.sqrt(hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    ig = g_ref[0, 0, :, 0].astype(jnp.float32)   # (c,)
+    fg = g_ref[0, 0, :, 1].astype(jnp.float32)
+
+    C_in = c_scr[...]                            # (hd, hd)  Σ v kᵀ layout
+    n_in = n_scr[...]                            # (1, hd)
+    m_in = m_scr[0, 0]
+
+    b = jnp.cumsum(fg)                           # (c,) inclusive log-decay
+    a_shift = ig - b                             # ĩ_s − b_s
+    M = jnp.maximum(m_in, jax.lax.cummax(a_shift, axis=0))  # (c,)
+
+    # decay matrix D_ts = exp(ĩ_s − b_s − M_t) · [s ≤ t]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    logd = a_shift[None, :] - M[:, None]
+    D = jnp.where(s_idx <= t_idx, jnp.exp(logd), 0.0)       # (c, c)
+
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    num = jax.lax.dot_general(qk * D, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (c, hd)
+    carry_w = jnp.exp(m_in - M)                               # (c,)
+    num += carry_w[:, None] * jax.lax.dot_general(
+        q, C_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # q · C_inᵀ? C layout: C[d_v, d_k]; num_t[i] = Σ_j C[i,j] q[j] -> q @ C^T
+
+    n_t = jax.lax.dot_general(D, k, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (c, hd)
+    n_t += carry_w[:, None] * n_in                            # (c, hd)
+
+    den = jnp.maximum(jnp.abs(jnp.sum(n_t * q, axis=1, keepdims=True)), 1.0)
+    h_ref[0, 0] = (num / den).astype(h_ref.dtype)
+
+    # ---- chunk-end carries ----
+    # m_out = b_c + M_c  ⇒  carry weights exp(b_c − b_s + ĩ_s − m_out)
+    # simplify to exp(ĩ_s − b_s − M_c):
+    m_out = b[-1] + M[-1]
+    w = jnp.exp(a_shift - M[-1])
+    c_new = jax.lax.dot_general(
+        v * w[:, None], k, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                          # (hd_v, hd_k)
+    carry_scale = jnp.exp(m_in - M[-1])
+    c_scr[...] = carry_scale * C_in + c_new
+    n_scr[...] = carry_scale * n_in + jnp.sum(k * w[:, None], axis=0, keepdims=True)
+    m_scr[0, 0] = m_out
+
+    @pl.when(cj == n_chunks - 1)
+    def _fin():
+        cout_ref[0, 0] = c_scr[...]
+        nout_ref[0, 0] = n_scr[0, :]
+        mout_ref[0, 0] = m_scr[0, 0]
+
+
+def mlstm_chunkwise(
+    q: jax.Array,       # (B, H, S, hd)
+    k: jax.Array,
+    v: jax.Array,
+    gates: jax.Array,   # (B, H, S, 2)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    B, H, S, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    kernel = functools.partial(
+        _mlstm_kernel, chunk=chunk, n_chunks=n_chunks, hd=hd
+    )
+    grid = (B, H, n_chunks)
+    h, C, n, m = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 2), lambda b, hh, c: (b, hh, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, hh, c: (b, hh, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, hh, c: (b, hh, 0)),
+            pl.BlockSpec((1, 1), lambda b, hh, c: (b, hh)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, gates)
+    return h, (C, n, m)

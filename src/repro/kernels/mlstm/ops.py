@@ -1,0 +1,40 @@
+"""Public wrapper for the chunkwise mLSTM kernel: pads ragged sequence
+lengths (gate pads use f̃=0, ĩ=-inf so padded steps are no-ops) and exposes
+the (B, S, H, hd) model layout."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mlstm.kernel import mlstm_chunkwise as _kernel
+
+NEG = -1e30
+
+
+def mlstm(
+    q: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    gates: jax.Array,   # (B, S, H, 2)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    B, S, H, hd = q.shape
+    pad = (-S) % min(chunk, S)
+    qm = jnp.moveaxis(q, 2, 1)
+    km = jnp.moveaxis(k, 2, 1)
+    vm = jnp.moveaxis(v, 2, 1)
+    gm = jnp.moveaxis(gates, 2, 1)
+    if pad:
+        w4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        qm, km, vm = jnp.pad(qm, w4), jnp.pad(km, w4), jnp.pad(vm, w4)
+        gpad = jnp.concatenate(
+            [jnp.full((B, H, pad, 1), NEG, gm.dtype), jnp.zeros((B, H, pad, 1), gm.dtype)],
+            axis=-1,
+        )
+        gm = jnp.concatenate([gm, gpad], axis=2)
+    h, state = _kernel(qm, km, vm, gm, chunk=min(chunk, S), interpret=interpret)
+    return jnp.moveaxis(h[:, :, :S], 1, 2), state

@@ -1,0 +1,59 @@
+"""Sequential oracle for the mLSTM matrix-memory recurrence (xLSTM).
+
+Per head, with log-space gate pre-activations ĩ_t, f̃_t and stabilizer m:
+
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    i'  = exp(ĩ_t − m_t);  f' = exp(f̃_t + m_{t-1} − m_t)
+    C_t = f'·C_{t-1} + i'·v_t (k_t/√hd)ᵀ
+    n_t = f'·n_{t-1} + i'·(k_t/√hd)
+    h_t = (C_t q_t) / max(|n_t·q_t|, 1)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlstm_ref(
+    q: jax.Array,       # (B, H, S, hd)
+    k: jax.Array,
+    v: jax.Array,
+    gates: jax.Array,   # (B, H, S, 2): [:, :, :, 0]=ĩ, [:, :, :, 1]=f̃
+    state: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    B, H, S, hd = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, gt = xs
+        it, ft = gt[..., 0].astype(jnp.float32), gt[..., 1].astype(jnp.float32)
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        kf = kt.astype(jnp.float32) / np.sqrt(hd)
+        C = f_[..., None, None] * C + i_[..., None, None] * (
+            vt.astype(jnp.float32)[..., :, None] * kf[..., None, :]
+        )
+        n = f_[..., None] * n + i_[..., None] * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhij,bhj->bhi", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qf)), 1.0)
+        return (C, n, m_new), num / den[..., None]
+
+    (C, n, m), hs = jax.lax.scan(
+        step, (C0, n0, m0),
+        (q.swapaxes(0, 2).swapaxes(1, 2), k.swapaxes(0, 2).swapaxes(1, 2),
+         v.swapaxes(0, 2).swapaxes(1, 2), gates.swapaxes(0, 2).swapaxes(1, 2)),
+    )
+    # hs: (S, B, H, hd) -> (B, H, S, hd)
+    h = jnp.moveaxis(hs, 0, 2)
+    return h.astype(q.dtype), (C, n, m)

@@ -1,0 +1,112 @@
+"""Chunked selective scan (Mamba recurrence) as a Pallas TPU kernel.
+
+GPU Mamba fuses the whole scan into one kernel with warp shuffles; the TPU
+adaptation chunks the sequence instead: the grid's innermost dim walks
+chunks SEQUENTIALLY (TPU grid order guarantee) carrying the (block_inner, N)
+state in VMEM scratch, and the per-chunk work is dense VPU/MXU-friendly
+elementwise math over (chunk, block_inner) tiles. The ``inner`` channel dim
+is blocked in the middle grid dim so arbitrary expand×d_model fits VMEM.
+
+Inputs are the post-projection selective params (ops.py batches the
+projections as big matmuls — same split as the jnp path in models/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(
+    u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+    y_ref, hout_ref,
+    h_scr,
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, :, :].astype(jnp.float32)
+
+    u = u_ref[0, :, :].astype(jnp.float32)      # (chunk, bi)
+    dt = dt_ref[0, :, :].astype(jnp.float32)    # (chunk, bi)
+    b = b_ref[0, :, :].astype(jnp.float32)      # (chunk, N)
+    c = c_ref[0, :, :].astype(jnp.float32)      # (chunk, N)
+    a = a_ref[...].astype(jnp.float32)          # (bi, N)
+    d = d_ref[...].astype(jnp.float32)          # (1, bi)
+
+    def step(t, carry):
+        h = carry                                # (bi, N)
+        da = jnp.exp(dt[t, :][:, None] * a)      # (bi, N)
+        db = dt[t, :][:, None] * b[t, :][None, :]
+        h = da * h + db * u[t, :][:, None]
+        y_t = jnp.sum(h * c[t, :][None, :], axis=1) + d[0] * u[t, :]
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(cj == n_chunks - 1)
+    def _fin():
+        hout_ref[0, :, :] = h_scr[...]
+
+
+def ssm_scan(
+    u: jax.Array,        # (B, S, inner)
+    dt: jax.Array,       # (B, S, inner)
+    B_: jax.Array,       # (B, S, N)
+    C_: jax.Array,       # (B, S, N)
+    A: jax.Array,        # (inner, N)
+    D: jax.Array,        # (inner,)
+    h0: Optional[jax.Array] = None,
+    *,
+    chunk: int = 64,
+    block_inner: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,inner), h_final (B,inner,N) f32)."""
+    Bb, S, inner = u.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    block_inner = min(block_inner, inner)
+    assert S % chunk == 0 and inner % block_inner == 0
+    n_chunks = S // chunk
+    n_blk = inner // block_inner
+    if h0 is None:
+        h0 = jnp.zeros((Bb, inner, N), jnp.float32)
+    d2 = D.reshape(1, inner)
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid = (Bb, n_blk, n_chunks)
+    y, h_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_inner), lambda b, i, c: (b, c, i)),  # u
+            pl.BlockSpec((1, chunk, block_inner), lambda b, i, c: (b, c, i)),  # dt
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),            # B
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),            # C
+            pl.BlockSpec((block_inner, N), lambda b, i, c: (i, 0)),            # A
+            pl.BlockSpec((1, block_inner), lambda b, i, c: (0, i)),            # D
+            pl.BlockSpec((1, block_inner, N), lambda b, i, c: (b, i, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_inner), lambda b, i, c: (b, c, i)),  # y
+            pl.BlockSpec((1, block_inner, N), lambda b, i, c: (b, i, 0)),      # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, inner), u.dtype),
+            jax.ShapeDtypeStruct((Bb, inner, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_inner, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, B_, C_, A, d2, h0)
+    return y, h_out

@@ -1,0 +1,34 @@
+"""Public wrapper for the selective-scan kernel: does the MXU-friendly
+selective-parameter projections as plain jnp matmuls, calls the Pallas
+recurrence, and pads ragged shapes to block multiples."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan as _kernel
+
+
+def ssm_scan(
+    u, dt, B_, C_, A, D, h0=None, *, chunk: int = 64, block_inner: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    Bb, S, inner = u.shape
+    pad_s = (-S) % chunk
+    if pad_s:
+        widths3 = ((0, 0), (0, pad_s), (0, 0))
+        u = jnp.pad(u, widths3)
+        # pad dt with zeros -> exp(0·A)=1, db=0: state passes through unchanged
+        dt = jnp.pad(dt, widths3)
+        B_ = jnp.pad(B_, widths3)
+        C_ = jnp.pad(C_, widths3)
+    bi = min(block_inner, inner)
+    while inner % bi:
+        bi //= 2
+    y, h = _kernel(
+        u, dt, B_, C_, A, D, h0, chunk=chunk, block_inner=max(bi, 1),
+        interpret=interpret,
+    )
+    return y[:, :S, :], h

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the chunked selective-scan (Mamba) kernel.
+
+Sequential reference recurrence, f32 state:
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t ⊙ B_t) · u_t
+    y_t = C_t · h_t + D ⊙ u_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(
+    u: jax.Array,        # (B, S, inner)
+    dt: jax.Array,       # (B, S, inner)
+    B_: jax.Array,       # (B, S, N)
+    C_: jax.Array,       # (B, S, N)
+    A: jax.Array,        # (inner, N)  negative decay rates
+    D: jax.Array,        # (inner,)
+    h0: Optional[jax.Array] = None,   # (B, inner, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,inner) in u.dtype, h_final (B,inner,N) f32)."""
+    Bb, S, inner = u.shape
+    N = A.shape[1]
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, inner, N), jnp.float32)
+
+    def step(h, xs):
+        ut, dtt, bt, ct = xs
+        da = jnp.exp(dtt.astype(jnp.float32)[..., None] * Af)      # (B,inner,N)
+        db = dtt.astype(jnp.float32)[..., None] * bt.astype(jnp.float32)[:, None, :]
+        h = da * h + db * ut.astype(jnp.float32)[..., None]
+        y = jnp.einsum("bin,bn->bi", h, ct.astype(jnp.float32))
+        y = y + D.astype(jnp.float32) * ut.astype(jnp.float32)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h0,
+        (u.swapaxes(0, 1), dt.swapaxes(0, 1), B_.swapaxes(0, 1), C_.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1).astype(u.dtype), h

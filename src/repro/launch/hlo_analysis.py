@@ -1,0 +1,78 @@
+"""Parse compiled HLO for roofline inputs.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective traffic;
+we parse the post-SPMD (per-device) HLO text and sum the output operand
+sizes of every collective op, bucketed by kind. Shapes in the partitioned
+module are per-device, so the sums are per-chip bytes on the wire (for
+all-reduce we count the ring-equivalent 2× payload explicitly in roofline).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+import numpy as np
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# one shaped buffer like  f32[16,128]  or  bf16[4,8,128]  or  f32[]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <shape-or-tuple> opcode(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+("
+    + "|".join(k.replace("-", "\\-") for k in COLLECTIVE_KINDS)
+    + r")(-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind output bytes of every collective in a (per-device) HLO."""
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    out["count"] = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":  # avoid double counting async pairs
+            continue
+        out[kind] += _shape_bytes(shape_text)
+        out["count"] += 1
+    return out
+
+
+def collective_wire_bytes(cbytes: Dict[str, int]) -> float:
+    """Approximate per-chip wire traffic from per-kind output bytes.
+
+    Ring algorithms: all-reduce moves ~2× the buffer over the slowest link;
+    all-gather/reduce-scatter move ~1× the (full) buffer; all-to-all and
+    collective-permute move their payload once.
+    """
+    return (
+        2.0 * cbytes["all-reduce"]
+        + cbytes["all-gather"]
+        + cbytes["reduce-scatter"]
+        + cbytes["all-to-all"]
+        + cbytes["collective-permute"]
+    )

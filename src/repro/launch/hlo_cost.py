@@ -1,0 +1,316 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — useless for
+scan-over-layers programs (a 64-layer model reports 1/64th of its FLOPs).
+This module walks the post-SPMD HLO text recursively:
+
+* ``while``      — body cost × known_trip_count (from backend_config)
+* ``fusion``     — FLOPs recurse into the fused computation; bytes are
+                   counted at the fusion *boundary* (operands + output),
+                   matching what actually moves through HBM
+* ``call``/``conditional`` — recurse (conditional: max of branches)
+* ``dot``        — 2 × prod(output dims) × prod(contracting dims)
+* elementwise/reduce — 1 FLOP per output (transcendentals too: roofline
+                   noise, dots dominate)
+* collectives    — per-kind output bytes, × enclosing trip counts
+
+All shapes in the partitioned module are per-device, so every number this
+produces is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = {
+    "all-gather": "all-gather",
+    "all-gather-start": "all-gather",
+    "all-reduce": "all-reduce",
+    "all-reduce-start": "all-reduce",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-permute-start": "collective-permute",
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "sqrt", "rsqrt",
+    "cbrt", "negate", "maximum", "minimum", "compare", "select", "and", "or",
+    "xor", "not", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "clamp", "cosine", "sine", "tan", "atan2", "logistic",
+    "erf", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([a-z][\w\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    def operands(self) -> List[str]:
+        # operand refs appear as %name before the closing paren of the op
+        depth, i, end = 1, 0, len(self.rest)
+        while i < end and depth:
+            if self.rest[i] == "(":
+                depth += 1
+            elif self.rest[i] == ")":
+                depth -= 1
+            i += 1
+        arglist = self.rest[: i - 1] if depth == 0 else self.rest
+        return re.findall(r"%([\w\.\-]+)", arglist)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_marker: Optional[str] = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = Computation(mc.group(2), [], {})
+            comps[cur.name] = cur
+            if mc.group(1):
+                entry_marker = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, shape, opcode, rest = mi.groups()
+        cur.instrs.append(Instr(name, shape, opcode, rest))
+        cur.shapes[name] = shape
+    if entry_marker:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")}
+    )
+    collective_count: int = 0
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k,
+            self.bytes * k,
+            self.transcendentals * k,
+            {n: v * k for n, v in self.collectives.items()},
+            int(self.collective_count * k),
+        )
+
+    def add(self, o: "Cost") -> None:
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        for n, v in o.collectives.items():
+            self.collectives[n] += v
+        self.collective_count += o.collective_count
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.shape)
+    mcon = _CONTRACT_RE.search(instr.rest)
+    contract = 1
+    ops = instr.operands()
+    if mcon and ops:
+        lhs_dims = _first_shape_dims(shapes.get(ops[0], ""))
+        for idx in (int(x) for x in mcon.group(1).split(",") if x):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def compute_cost(
+    comps: Dict[str, Computation],
+    comp_name: str,
+    *,
+    bytes_at_boundary: bool,
+    _memo: Optional[Dict[Tuple[str, bool], Cost]] = None,
+) -> Cost:
+    if _memo is None:
+        _memo = {}
+    key = (comp_name, bytes_at_boundary)
+    if key in _memo:
+        return _memo[key]
+    comp = comps[comp_name]
+    total = Cost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            mb = _BODY_RE.search(ins.rest)
+            if mb:
+                body = compute_cost(comps, mb.group(1), bytes_at_boundary=bytes_at_boundary, _memo=_memo)
+                total.add(body.scaled(trip))
+        elif op == "fusion":
+            mcall = _CALLS_RE.search(ins.rest)
+            if mcall:
+                inner = compute_cost(comps, mcall.group(1), bytes_at_boundary=False, _memo=_memo)
+                total.flops += inner.flops
+                total.transcendentals += inner.transcendentals
+                for n, v in inner.collectives.items():
+                    total.collectives[n] += v
+            # bytes at the fusion boundary: operands + output
+            total.bytes += _shape_bytes(ins.shape)
+            for o in ins.operands():
+                total.bytes += _shape_bytes(comp.shapes.get(o, ""))
+        elif op in ("call", "async-start"):
+            mcall = _CALLS_RE.search(ins.rest) or _TO_APPLY_RE.search(ins.rest)
+            if mcall:
+                total.add(
+                    compute_cost(comps, mcall.group(1), bytes_at_boundary=bytes_at_boundary, _memo=_memo)
+                )
+        elif op == "conditional":
+            mb = _BRANCHES_RE.search(ins.rest)
+            if mb:
+                branches = re.findall(r"%([\w\.\-]+)", mb.group(1))
+                costs = [
+                    compute_cost(comps, b, bytes_at_boundary=bytes_at_boundary, _memo=_memo)
+                    for b in branches
+                ]
+                if costs:
+                    worst = max(costs, key=lambda c: c.flops + c.bytes)
+                    total.add(worst)
+        elif op in ("dot", "convolution"):
+            total.flops += _dot_flops(ins, comp.shapes)
+            total.bytes += _shape_bytes(ins.shape)
+            for o in ins.operands():
+                total.bytes += _shape_bytes(comp.shapes.get(o, ""))
+        elif op in COLLECTIVE_OPS:
+            kind = COLLECTIVE_OPS[op]
+            b = _shape_bytes(ins.shape)
+            total.collectives[kind] += b
+            total.collective_count += 1
+            total.bytes += b
+        elif op in _ELEMENTWISE:
+            n = _shape_elems(ins.shape)
+            total.flops += n
+            if op in ("exponential", "log", "tanh", "logistic", "erf", "cosine",
+                      "sine", "power", "sqrt", "rsqrt", "cbrt"):
+                total.transcendentals += n
+            if not bytes_at_boundary:
+                pass  # inside a fusion: no HBM traffic
+            else:
+                total.bytes += _shape_bytes(ins.shape)
+                for o in ins.operands():
+                    total.bytes += _shape_bytes(comp.shapes.get(o, ""))
+        elif op in ("reduce", "reduce-window"):
+            ops_ = ins.operands()
+            if ops_:
+                total.flops += _shape_elems(comp.shapes.get(ops_[0], ""))
+            if bytes_at_boundary:
+                total.bytes += _shape_bytes(ins.shape)
+                for o in ins.operands():
+                    total.bytes += _shape_bytes(comp.shapes.get(o, ""))
+        elif op in ("copy", "transpose", "reshape", "broadcast", "concatenate",
+                    "slice", "dynamic-slice", "dynamic-update-slice", "gather",
+                    "scatter", "pad", "reverse", "sort", "iota", "convert",
+                    "bitcast-convert"):
+            if bytes_at_boundary and op not in ("reshape", "bitcast-convert", "iota"):
+                total.bytes += _shape_bytes(ins.shape)
+                for o in ins.operands():
+                    total.bytes += _shape_bytes(comp.shapes.get(o, ""))
+    _memo[key] = total
+    return total
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    comps = parse_module(hlo_text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    c = compute_cost(comps, "__entry__", bytes_at_boundary=True)
+    wire = (
+        2.0 * c.collectives["all-reduce"]
+        + c.collectives["all-gather"]
+        + c.collectives["reduce-scatter"]
+        + c.collectives["all-to-all"]
+        + c.collectives["collective-permute"]
+    )
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.bytes,
+        "transcendentals": c.transcendentals,
+        "collective_count": c.collective_count,
+        "collective_wire_bytes": wire,
+        **{f"coll_{k}": v for k, v in c.collectives.items()},
+    }

@@ -1,0 +1,60 @@
+"""Serving launcher: batched prefill + greedy decode on the host mesh.
+
+    python -m repro.launch.serve --arch <id> [--batch 4] [--prompt-len 64]
+        [--new-tokens 16] [--int8-cache]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShardingLayout, get_arch, list_archs
+from repro.models import build_model
+from repro.train.steps import run_opts_from_layout
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--int8-cache", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    layout = ShardingLayout(int8_kv_cache=args.int8_cache)
+    opts = run_opts_from_layout(layout)
+
+    B, S = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size, jnp.int32)}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        batch["patches"] = jax.random.normal(jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16)
+
+    total = S + args.new_tokens
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, total, opts))(params, batch)
+    jax.block_until_ready(logits)
+    print(f"prefill {S} tokens x{B}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    decode = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos, opts))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    toks = [tok]
+    for i in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        toks.append(tok)
+    jax.block_until_ready(tok)
+    dt = (time.perf_counter() - t0) / max(args.new_tokens - 1, 1)
+    print(f"decode: {dt*1e3:.1f} ms/token (int8_cache={args.int8_cache})")
+    print("first row:", jnp.concatenate(toks, axis=1)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch <id> [--steps N] [--reduced]
+        [--spot-mode siwoft|checkpoint|hybrid|none] [--layout baseline]
+
+On real hardware this binds to the production mesh (jax.distributed over
+pods); on this container it runs the reduced config on the host mesh. With
+``--spot-mode`` the run goes through the P-SIWOFT orchestrator (the paper's
+provisioning layer); with ``none`` it is a plain training loop.
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.ckpt import CheckpointManager
+from repro.config import ShardingLayout, TrainConfig, get_arch, list_archs
+from repro.core import generate_markets, split_history_future
+from repro.core.orchestrator import SpotTrainingOrchestrator
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.train.loop import run_segment
+from repro.train.steps import init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--spot-mode", default="none",
+                    choices=["none", "siwoft", "checkpoint", "hybrid"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=min(20, args.steps // 10 + 1))
+    print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M mode={args.spot_mode}")
+
+    if args.spot_mode == "none":
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+        state = init_train_state(model, jax.random.key(args.seed))
+        res = run_segment(
+            model, state, ds, mesh, tc, ShardingLayout(),
+            num_steps=args.steps, ckpt=ckpt, ckpt_every=50,
+        )
+        if ckpt:
+            ckpt.close()
+        print(f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}; "
+              f"mean step {sum(res.step_seconds)/len(res.step_seconds)*1e3:.0f} ms")
+        return
+
+    ms = generate_markets(seed=3, n_hours=24 * 90 + 24 * 30)
+    hist, fut = split_history_future(ms, 24 * 90)
+    with tempfile.TemporaryDirectory() as d:
+        orch = SpotTrainingOrchestrator(
+            model, ds, mesh, hist, fut, mode=args.spot_mode, tc=tc,
+            segment_steps=max(args.steps // 5, 1), steps_per_trace_hour=200,
+            ckpt_dir=args.ckpt_dir or d, ckpt_every=10, seed=args.seed,
+        )
+        rep = orch.run(args.steps)
+    print(f"useful={rep.useful_steps} wasted={rep.wasted_steps} revs={rep.revocations} "
+          f"goodput={rep.goodput:.2f} cost=${rep.cost_dollars:.4f} "
+          f"loss {rep.losses[0]:.4f} -> {rep.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

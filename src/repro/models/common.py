@@ -1,0 +1,141 @@
+"""Parameter-spec machinery shared by every model family.
+
+A model is a pure-functional pair ``(param_specs, apply)``:
+
+* ``param_specs(cfg)`` returns a pytree of :class:`ParamSpec` — shape, logical
+  sharding axes, and init recipe for every parameter.  Logical axes (e.g.
+  ``("embed", "ffn")``) are resolved to mesh :class:`PartitionSpec`s by
+  ``repro.dist.sharding`` — models never name mesh axes directly.
+* ``init_params(specs, key)`` materializes the pytree (used by smoke tests
+  and real training); ``abstract_params(specs)`` yields ShapeDtypeStructs for
+  the allocation-free dry-run.
+
+Stacked (scan-over-layers) parameters carry a leading ``"layers"`` logical
+axis which is never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis names used across the model zoo. The sharding rules tables in
+# repro.dist.sharding map these to mesh axes.
+LOGICAL_AXES = (
+    "layers",      # scan dim — never sharded
+    "groups",      # xLSTM super-block scan dim — never sharded
+    "vocab",       # embedding / lm-head vocab dim
+    "embed",       # d_model (a.k.a. residual stream)
+    "q_dim",       # fused num_heads * head_dim projection output
+    "kv_dim",      # fused num_kv_heads * head_dim projection output
+    "heads",       # attention heads (activations)
+    "kv_heads",
+    "head_dim",
+    "ffn",         # MLP hidden
+    "experts",     # MoE expert dim
+    "ssm_inner",   # Mamba inner (expand * d_model)
+    "ssm_state",   # Mamba state N
+    "conv",        # depthwise conv width
+    "dt_rank",
+    "enc_embed",   # encoder width (enc-dec models)
+    "vit_embed",   # stub vision encoder width (VLM)
+    "seq",         # sequence dim (activations only)
+    "batch",       # batch dim (activations only)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    scale: float = 1.0            # multiplier on the init std
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(dtype)
+    # fan-in scaled normal (truncation unnecessary for our purposes)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def init_params(specs: Any, key: jax.Array) -> Any:
+    """Materialize a ParamSpec pytree into arrays (deterministic in key)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_init_one(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(specs: Any) -> Any:
+    """ShapeDtypeStruct pytree — no allocation; feeds .lower() in the dry-run."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def spec_axes(specs: Any) -> Any:
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def param_bytes(specs: Any) -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    ):
+        total += int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def stack_specs(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Prepend a scan (stacking) dim to a spec."""
+    return dataclasses.replace(
+        spec, shape=(n,) + spec.shape, axes=(axis_name,) + spec.axes
+    )
+
+
+def stacked(tree: Any, n: int, axis_name: str = "layers") -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: stack_specs(s, n, axis_name),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+def cast(x: jax.Array, dtype: str) -> jax.Array:
+    return x.astype(jnp.dtype(dtype))
+
+
+def dense(x: jax.Array, w: jax.Array, compute_dtype: str) -> jax.Array:
+    """y = x @ w with params cast to the compute dtype (bf16 matmul on MXU)."""
+    return jnp.einsum(
+        "...d,df->...f",
+        x.astype(jnp.dtype(compute_dtype)),
+        w.astype(jnp.dtype(compute_dtype)),
+    )

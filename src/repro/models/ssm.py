@@ -1,0 +1,168 @@
+"""Mamba-style selective SSM block (used standalone and inside Hymba's
+parallel attention+SSM blocks).
+
+The pure-jnp path runs the recurrence as ``scan(chunks) ∘ scan(steps)`` with
+an O(B·inner·N) carried state — it never materializes the (B,S,inner,N)
+decay tensor (which is terabytes at our shapes). The TPU-native chunked
+kernel in ``repro.kernels.ssm_scan`` computes the same recurrence with VMEM
+tiling; this module is its oracle-equivalent and the path used for
+lowering/dry-run.
+
+State layout (also the decode state): ``{"conv": (B, W-1, inner),
+"h": (B, inner, N)}`` — constant per-token memory, which is what makes
+``long_500k`` decoding viable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return inner, s.state_dim, dt_rank, s.conv_width
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    inner, N, R, W = _dims(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * inner), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((W, inner), ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": ParamSpec((inner,), ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec((inner, R + 2 * N), ("ssm_inner", None)),
+        "dt_proj": ParamSpec((R, inner), ("dt_rank", "ssm_inner")),
+        "dt_bias": ParamSpec((inner,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((inner, N), ("ssm_inner", "ssm_state"), init="ones"),
+        "D": ParamSpec((inner,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    inner, N, _, W = _dims(cfg)
+    return {
+        "conv": ParamSpec((batch, W - 1, inner), ("batch", None, "ssm_inner"), init="zeros"),
+        "h": ParamSpec((batch, inner, N), ("batch", "ssm_inner", "ssm_state"), init="zeros"),
+    }
+
+
+def _ssm_params(params: Dict, u: jax.Array, cfg: ModelConfig):
+    """u: (..., inner) post-conv activations -> (dt, B_, C_) selective params."""
+    inner, N, R, _ = _dims(cfg)
+    proj = common.dense(u, params["x_proj"], "float32")
+    dt_low, B_, C_ = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        common.dense(dt_low, params["dt_proj"], "float32")
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    return dt, B_, C_
+
+
+def _step(
+    params: Dict,
+    h: jax.Array,
+    u: jax.Array,
+    dt: jax.Array,
+    B_: jax.Array,
+    C_: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrence step. h: (B, inner, N) f32; u/dt: (B, inner); B_/C_: (B, N)."""
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (inner, N)
+    da = jnp.exp(dt[..., None] * A)                    # (B, inner, N)
+    db = dt[..., None] * B_[:, None, :]                # (B, inner, N)
+    h = da * h + db * u.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bin,bn->bi", h, C_) + params["D"].astype(jnp.float32) * u
+    return h, y
+
+
+def _causal_conv(params: Dict, x: jax.Array, prefix: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. x: (B,S,inner); prefix: (B,W-1,inner)."""
+    W = params["conv_w"].shape[0]
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * params["conv_w"][i].astype(x.dtype)
+        for i in range(W)
+    )
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def mamba_block(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Full-sequence Mamba block. x: (B, S, d) -> (y (B,S,d), final state)."""
+    B, S, d = x.shape
+    inner, N, _, W = _dims(cfg)
+    ct = jnp.dtype(cfg.dtype)
+    chunk = max(1, min(cfg.ssm.chunk, S))
+
+    xz = common.dense(x, params["in_proj"], cfg.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_prefix = (
+        state["conv"] if state is not None else jnp.zeros((B, W - 1, inner), ct)
+    )
+    u = jax.nn.silu(_causal_conv(params, xin, conv_prefix))  # (B,S,inner)
+
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, inner, N), jnp.float32)
+    )
+
+    if S % chunk:
+        chunk = 1
+    n_chunks = S // chunk
+    uc = u.reshape(B, n_chunks, chunk, inner).swapaxes(0, 1)
+
+    @jax.checkpoint  # backward saves only the (B, inner, N) chunk boundaries
+    def chunk_step(h, u_chunk):  # u_chunk: (B, chunk, inner)
+        # Selective params for the whole chunk in one batched matmul (MXU-
+        # friendly); the sequential part carries only the (B, inner, N) state.
+        dt, B_, C_ = _ssm_params(params, u_chunk, cfg)
+
+        def step(hh, xs):
+            ut, dtt, bt, ct_ = xs
+            hh, y = _step(params, hh, ut, dtt, bt, ct_)
+            return hh, y
+
+        h, ys = jax.lax.scan(
+            step,
+            h,
+            (
+                u_chunk.swapaxes(0, 1),
+                dt.swapaxes(0, 1),
+                B_.swapaxes(0, 1),
+                C_.swapaxes(0, 1),
+            ),
+        )
+        return h, ys.swapaxes(0, 1)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, uc)
+    y = ys.swapaxes(0, 1).reshape(B, S, inner).astype(ct)
+    y = y * jax.nn.silu(z)
+    out = common.dense(y, params["out_proj"], cfg.dtype)
+    new_state = {
+        "conv": jnp.concatenate([conv_prefix.astype(ct), xin], axis=1)[:, -(W - 1):, :],
+        "h": h_final,
+    }
+    return out, new_state
+
+
+def mamba_decode_step(
+    params: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict]:
+    """Single-token step. x: (B, 1, d) -> (y (B,1,d), new state)."""
+    out, new_state = mamba_block(params, x, cfg, state=state)
+    return out, new_state

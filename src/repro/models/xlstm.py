@@ -1,0 +1,245 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows arXiv:2405.04517. The mLSTM cell keeps a per-head (hd × hd) matrix
+memory C, a normalizer n, and a max-state m for numerically-stable
+exponential gating:
+
+    i_t = exp(ĩ_t),  f_t = exp(f̃_t)          (stabilized via m_t)
+    C_t = f C_{t-1} + i v_t k_tᵀ,   n_t = f n_{t-1} + i k_t
+    h_t = o ⊙ (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+The recurrence is chunked like the Mamba scan (projections batched per
+chunk, the sequential part carries only (B, H, hd, hd)). The layer stack is
+arranged as ``groups × (slstm_every-1 mLSTM + 1 sLSTM)`` super-blocks so
+both block kinds scan over layers (see transformer.py).
+
+Decode state per mLSTM layer: {"C": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)};
+per sLSTM layer: {"c","n","h","m": (B,d)} — constant per token, which makes
+xLSTM a ``long_500k``-capable arch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    H = cfg.num_heads
+    inner = 2 * cfg.d_model  # up-projection factor 2 (paper's mLSTM block)
+    hd = inner // H
+    return H, inner, hd
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    H, inner, hd = _mdims(cfg)
+    return {
+        "up_proj": ParamSpec((d, 2 * inner), ("embed", "ssm_inner")),
+        "wq": ParamSpec((inner, inner), ("ssm_inner", "q_dim")),
+        "wk": ParamSpec((inner, inner), ("ssm_inner", "q_dim")),
+        "wv": ParamSpec((inner, inner), ("ssm_inner", "q_dim")),
+        "w_if": ParamSpec((inner, 2 * H), ("ssm_inner", None)),  # i,f gate pre-acts
+        "b_if": ParamSpec((2 * H,), (None,), init="zeros"),
+        "down_proj": ParamSpec((inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    H, _, hd = _mdims(cfg)
+    return {
+        "C": ParamSpec((batch, H, hd, hd), ("batch", "heads", "head_dim", None), init="zeros"),
+        "n": ParamSpec((batch, H, hd), ("batch", "heads", "head_dim"), init="zeros"),
+        "m": ParamSpec((batch, H), ("batch", "heads"), init="zeros"),
+    }
+
+
+def _mlstm_scan(
+    q: jax.Array, k: jax.Array, v: jax.Array, gates: jax.Array, state: Dict, chunk: int
+) -> Tuple[jax.Array, Dict]:
+    """Chunkwise-parallel mLSTM (same exact decomposition as the Pallas
+    kernel in repro.kernels.mlstm — see its docstring for the math).
+
+    q/k/v: (B,S,H,hd); gates: (B,S,2H). Returns (h (B,S,H,hd), state).
+
+    Why chunkwise and not a per-step scan: differentiating an S-step scan
+    whose carry is the (B,H,hd,hd) matrix memory makes JAX save S copies of
+    C for the backward pass — terabytes at S=4096. The chunkwise form
+    carries C only at the S/chunk boundaries and does all intra-chunk work
+    as (chunk×chunk)/(chunk×hd) matmuls, with jax.checkpoint recomputing
+    inside each chunk during backward.
+    """
+    B, S, H, hd = q.shape
+    C0 = state["C"].astype(jnp.float32)
+    n0 = state["n"].astype(jnp.float32)
+    m0 = state["m"].astype(jnp.float32)
+
+    chunk = max(1, min(chunk, S))
+    if S % chunk:
+        chunk = 1
+    n_chunks = S // chunk
+
+    def to_chunks(x):  # (B,S,...) -> (n_chunks, B, chunk, ...)
+        return x.reshape(B, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, gc = map(to_chunks, (q, k, v, gates))
+    t_idx = jnp.arange(chunk)[:, None]
+    s_idx = jnp.arange(chunk)[None, :]
+    tri = s_idx <= t_idx  # (c, c)
+
+    @jax.checkpoint
+    def chunk_step(carry, xs):
+        C_in, n_in, m_in = carry                     # (B,H,hd,hd),(B,H,hd),(B,H)
+        qt, kt, vt, gt = xs                          # (B,c,H,hd) ×3, (B,c,2H)
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32) / np.sqrt(hd)
+        vf = vt.astype(jnp.float32)
+        ig = gt[..., :H].astype(jnp.float32)         # (B,c,H)
+        fg = gt[..., H:].astype(jnp.float32)
+
+        b = jnp.cumsum(fg, axis=1)                   # (B,c,H) inclusive
+        a_shift = ig - b
+        M = jnp.maximum(m_in[:, None, :], jax.lax.cummax(a_shift, axis=1))  # (B,c,H)
+
+        # D_ts = exp(ĩ_s − b_s − M_t) for s ≤ t
+        logd = a_shift[:, None, :, :] - M[:, :, None, :]          # (B,t,s,H)
+        D = jnp.where(tri[None, :, :, None], jnp.exp(logd), 0.0)
+
+        qk = jnp.einsum("bthd,bshd->btsh", qf, kf)               # (B,t,s,H)
+        num = jnp.einsum("btsh,bshd->bthd", qk * D, vf)          # (B,c,H,hd)
+        carry_w = jnp.exp(m_in[:, None, :] - M)                  # (B,c,H)
+        num += carry_w[..., None] * jnp.einsum("bthd,bhed->bthe", qf, C_in)
+
+        n_t = jnp.einsum("btsh,bshd->bthd", D, kf)
+        n_t += carry_w[..., None] * n_in[:, None]
+        den = jnp.maximum(jnp.abs(jnp.sum(n_t * qf, axis=-1)), 1.0)
+        h = num / den[..., None]                                  # (B,c,H,hd)
+
+        # chunk-end carries: weights exp(ĩ_s − b_s − M_c)
+        M_c = M[:, -1, :]                                         # (B,H)
+        w = jnp.exp(a_shift - M_c[:, None, :])                    # (B,c,H)
+        C_new = jnp.einsum("bshd,bshe->bhde", vf * w[..., None], kf)
+        cscale = jnp.exp(m_in - M_c)                              # (B,H)
+        C_out = cscale[..., None, None] * C_in + C_new
+        n_out = cscale[..., None] * n_in + jnp.sum(kf * w[..., None], axis=1)
+        m_out = b[:, -1, :] + M_c
+        return (C_out, n_out, m_out), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, gc))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,d) -> (y (B,S,d), new state)."""
+    B, S, d = x.shape
+    H, inner, hd = _mdims(cfg)
+    ct = jnp.dtype(cfg.dtype)
+    if state is None:
+        state = {
+            "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((B, H, hd), jnp.float32),
+            "m": jnp.zeros((B, H), jnp.float32),
+        }
+    up = common.dense(x, params["up_proj"], cfg.dtype)
+    u, z = jnp.split(up, 2, axis=-1)  # (B,S,inner) ×2
+    q = common.dense(u, params["wq"], cfg.dtype).reshape(B, S, H, hd)
+    k = common.dense(u, params["wk"], cfg.dtype).reshape(B, S, H, hd)
+    v = common.dense(u, params["wv"], cfg.dtype).reshape(B, S, H, hd)
+    gates = common.dense(u, params["w_if"], "float32") + params["b_if"].astype(jnp.float32)
+    h, new_state = _mlstm_scan(q, k, v, gates, state, cfg.ssm.chunk if cfg.ssm else 64)
+    y = h.reshape(B, S, inner).astype(ct) * jax.nn.silu(z)
+    return common.dense(y, params["down_proj"], cfg.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    return {
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "ssm_inner")),  # z,i,f,o pre-acts
+        "r_gates": ParamSpec((d, 4 * d), ("embed", "ssm_inner"), scale=0.5),
+        "b_gates": ParamSpec((4 * d,), ("ssm_inner",), init="zeros"),
+        "up_proj": ParamSpec((d, 2 * d), ("embed", "ffn")),
+        "down_proj": ParamSpec((d, d), ("ffn", "embed")),
+    }
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    return {
+        "c": ParamSpec((batch, d), ("batch", "embed"), init="zeros"),
+        "n": ParamSpec((batch, d), ("batch", "embed"), init="zeros"),
+        "h": ParamSpec((batch, d), ("batch", "embed"), init="zeros"),
+        "m": ParamSpec((batch, d), ("batch", "embed"), init="zeros"),
+    }
+
+
+def slstm_block(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """sLSTM with exponential gating and recurrent connections. x: (B,S,d)."""
+    B, S, d = x.shape
+    ct = jnp.dtype(cfg.dtype)
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = {"c": z, "n": z, "h": z, "m": z}
+
+    wx = common.dense(x, params["w_gates"], "float32") + params["b_gates"].astype(
+        jnp.float32
+    )  # (B,S,4d)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        pre = wx_t + common.dense(h, params["r_gates"], "float32")
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c = f_ * c + i_ * zt
+        n = f_ * n + i_
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    # two-level scan: backward saves only chunk-boundary carries, not all S
+    # per-step states (jax.checkpoint recomputes within a chunk)
+    chunk = 64 if S % 64 == 0 else (S if S < 64 else 1)
+    n_chunks = max(S // chunk, 1)
+    wxc = wx.swapaxes(0, 1).reshape(n_chunks, chunk, B, 4 * d)
+
+    @jax.checkpoint
+    def chunk_step(carry, wx_chunk):
+        carry, hs = jax.lax.scan(step, carry, wx_chunk)
+        return carry, hs
+
+    (c, n, h, m), hs = jax.lax.scan(
+        chunk_step, (state["c"], state["n"], state["h"], state["m"]), wxc
+    )
+    y = hs.reshape(S, B, d).swapaxes(0, 1).astype(ct)  # (B,S,d)
+    # position-wise up/down projection (GEGLU-style)
+    u = common.dense(y, params["up_proj"], cfg.dtype)
+    a, b = jnp.split(u, 2, axis=-1)
+    out = common.dense(jax.nn.gelu(a) * b, params["down_proj"], cfg.dtype)
+    return out, {"c": c, "n": n, "h": h, "m": m}

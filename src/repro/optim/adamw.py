@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay + global-norm clipping.
+
+Implemented directly on pytrees (no external deps). Optimizer state shards
+exactly like the parameters (same tree structure → same NamedShardings), so
+FSDP-sharded params get FSDP-sharded (m, v) for free — ZeRO-style.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array  # int32 step counter
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return OptState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: Any,
+    state: OptState,
+    params: Any,
+    lr: jax.Array,
+    tc: TrainConfig,
+) -> Tuple[Any, OptState]:
+    count = state.count + 1
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = lr * (mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p32)
+        return (p32 - step).astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(m=new_m, v=new_v, count=count)

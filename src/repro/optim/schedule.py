@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+
+def warmup_cosine(step, tc: TrainConfig):
+    step = step.astype(jnp.float32)
+    warm = tc.learning_rate * jnp.minimum(1.0, step / max(tc.warmup_steps, 1))
+    frac = jnp.clip(
+        (step - tc.warmup_steps) / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decayed = tc.learning_rate * (0.1 + 0.9 * cos)
+    return jnp.where(step < tc.warmup_steps, warm, decayed)
+
+
+def linear(step, tc: TrainConfig):
+    step = step.astype(jnp.float32)
+    warm = tc.learning_rate * jnp.minimum(1.0, step / max(tc.warmup_steps, 1))
+    frac = jnp.clip(
+        (step - tc.warmup_steps) / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0
+    )
+    return jnp.where(step < tc.warmup_steps, warm, tc.learning_rate * (1.0 - 0.9 * frac))
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "linear": linear}

@@ -1,0 +1,16 @@
+from repro.train.steps import (
+    TrainState,
+    abstract_train_state,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    cross_entropy,
+    init_train_state,
+    run_opts_from_layout,
+)
+
+__all__ = [
+    "TrainState", "abstract_train_state", "build_decode_step",
+    "build_prefill_step", "build_train_step", "cross_entropy",
+    "init_train_state", "run_opts_from_layout",
+]

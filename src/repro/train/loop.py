@@ -1,0 +1,105 @@
+"""Training loop: jitted step + prefetch + watchdog + checkpoint hooks +
+revocation signals.
+
+``run_segment`` executes a bounded slice of steps — the orchestrator's unit
+of provisioning. A ``revoke_at_step`` callback injects spot-instance
+revocations (2-minute-notice semantics are simulated by the orchestrator);
+the loop raises :class:`Revoked` carrying the last step completed, so the
+caller decides what survives (nothing for P-SIWOFT, the last checkpoint for
+the FT baseline, the in-memory boundary state for segment handoff).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.config.base import ShardingLayout, TrainConfig
+from repro.data import Prefetcher, SyntheticLM
+from repro.dist import batch_shardings, make_activation_constrainer, param_shardings
+from repro.models import zoo
+from repro.optim import OptState
+from repro.train.steps import TrainState, build_train_step, init_train_state
+from repro.train.watchdog import StragglerWatchdog
+
+
+class Revoked(Exception):
+    def __init__(self, last_step: int):
+        super().__init__(f"spot instance revoked after step {last_step}")
+        self.last_step = last_step
+
+
+@dataclasses.dataclass
+class SegmentResult:
+    state: TrainState
+    steps_done: int
+    losses: List[float]
+    step_seconds: List[float]
+    stragglers: List[int]
+
+
+def make_jitted_step(model: zoo.Model, tc: TrainConfig, layout: ShardingLayout, mesh):
+    constrain = make_activation_constrainer(mesh, layout, model.cfg)
+    step_fn = build_train_step(model, tc, layout, constrain)
+    p_sh = param_shardings(model.specs, mesh, layout)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    state_sh = TrainState(
+        params=p_sh, opt=OptState(m=p_sh, v=p_sh, count=repl), step=repl
+    )
+    return (
+        jax.jit(step_fn, in_shardings=(state_sh, None), out_shardings=(state_sh, None)),
+        state_sh,
+    )
+
+
+def run_segment(
+    model: zoo.Model,
+    state: TrainState,
+    dataset: SyntheticLM,
+    mesh,
+    tc: TrainConfig,
+    layout: ShardingLayout,
+    *,
+    num_steps: int,
+    start_step: int = 0,
+    ckpt: Optional[CheckpointManager] = None,
+    ckpt_every: int = 0,
+    revoke_at_step: Optional[Callable[[int], bool]] = None,
+    watchdog: Optional[StragglerWatchdog] = None,
+    jitted=None,
+) -> SegmentResult:
+    if jitted is None:
+        jitted, _ = make_jitted_step(model, tc, layout, mesh)
+    wd = watchdog or StragglerWatchdog()
+    losses: List[float] = []
+    times: List[float] = []
+    pre = Prefetcher(dataset, start_step=start_step)
+    try:
+        with mesh:
+            for i in range(num_steps):
+                step = start_step + i
+                if revoke_at_step is not None and revoke_at_step(step):
+                    raise Revoked(step - 1)
+                batch = pre.next()
+                t0 = time.perf_counter()
+                state, metrics = jitted(state, batch)
+                loss = float(metrics["loss"])  # blocks; = device sync
+                dt = time.perf_counter() - t0
+                losses.append(loss)
+                times.append(dt)
+                wd.observe(step, dt)
+                if ckpt is not None and ckpt_every and (step + 1) % ckpt_every == 0:
+                    ckpt.save(step + 1, state)
+    finally:
+        pre.close()
+    return SegmentResult(
+        state=state,
+        steps_done=num_steps,
+        losses=losses,
+        step_seconds=times,
+        stragglers=list(wd.flagged),
+    )

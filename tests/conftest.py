@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real (1-CPU) device set; only launch/dryrun.py forces 512 devices.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import InputShape, get_arch, list_archs
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="session")
+def tiny_shape():
+    return InputShape("tiny", seq_len=32, global_batch=2, mode="train")
+
+
+def pytest_report_header(config):
+    return f"jax {jax.__version__}, devices={jax.devices()}"

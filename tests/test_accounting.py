@@ -1,0 +1,68 @@
+"""Billing-cycle accounting properties (hypothesis) + CSV trace loader."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.market import generate_markets, load_csv_traces
+
+
+@given(
+    start=st.floats(0, 100),
+    durations=st.lists(st.floats(0.01, 5.0), min_size=1, max_size=6),
+    price=st.floats(0.01, 10.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_billing_invariants(start, durations, price):
+    session = Session(market_id=0, start_wall=start)
+    comps = ["execution", "re_execution", "checkpointing", "recovery", "startup"]
+    for i, d in enumerate(durations):
+        session.add(comps[i % len(comps)], d)
+    bd = Breakdown()
+    used = bill_session(session, lambda m, h: price, bd)
+    total = sum(durations)
+    assert used == pytest.approx(total, rel=1e-9)
+    # time conservation
+    assert bd.total_time == pytest.approx(total, rel=1e-9)
+    # whole-hour billing: cost = ceil(used) * price exactly (flat price)
+    assert bd.total_cost == pytest.approx(math.ceil(total) * price, rel=1e-6)
+    # buffer bounded by one cycle
+    assert 0 <= bd.cost["billing_buffer"] <= price + 1e-9
+
+
+@given(
+    d1=st.floats(0.1, 3.0), d2=st.floats(0.1, 3.0), price=st.floats(0.1, 5.0)
+)
+@settings(max_examples=30, deadline=None)
+def test_splitting_sessions_never_cheaper(d1, d2, price):
+    """Whole-hour billing: two sessions cost ≥ one merged session — the
+    source of the paper's 'buffer costs of billing cycles' FT overhead."""
+    def cost(durs):
+        bd = Breakdown()
+        for d in durs:
+            s = Session(0, 0.0)
+            s.add("execution", d)
+            bill_session(s, lambda m, h: price, bd)
+        return bd.total_cost
+
+    assert cost([d1, d2]) >= cost([d1 + d2]) - 1e-9
+
+
+def test_csv_roundtrip(tmp_path):
+    ms = generate_markets(seed=0, n_hours=48)
+    rows = ["market_id,instance_type,region,zone,memory_gb,on_demand_price,"
+            + ",".join(f"h{i}" for i in range(48))]
+    for m in ms.markets[:10]:
+        prices = ",".join(f"{p:.6f}" for p in ms.prices[m.market_id])
+        rows.append(
+            f"{m.market_id},{m.instance_type},{m.region},{m.zone},"
+            f"{m.memory_gb},{m.on_demand_price},{prices}"
+        )
+    p = tmp_path / "traces.csv"
+    p.write_text("\n".join(rows))
+    loaded = load_csv_traces(str(p))
+    assert len(loaded.markets) == 10
+    np.testing.assert_allclose(loaded.prices, ms.prices[:10], atol=1e-6)
+    np.testing.assert_allclose(loaded.mttr_hours(), ms.mttr_hours()[:10])

@@ -1,0 +1,141 @@
+"""Market-feature correctness + hypothesis property tests on the paper's
+three §III-A features and Algorithm 1's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Job,
+    MarketSet,
+    SiwoftPolicy,
+    generate_markets,
+    revocation_probability,
+    split_history_future,
+)
+from repro.core import provisioner as alg
+from repro.core.provisioner import MarketFeatures
+
+
+@pytest.fixture(scope="module")
+def markets():
+    return generate_markets(seed=0, n_hours=24 * 90)
+
+
+@pytest.fixture(scope="module")
+def feats(markets):
+    return MarketFeatures.from_history(markets)
+
+
+def test_mttr_rare_markets_exist(markets):
+    """The generator must produce the paper's key ingredient: rare-
+    revocation markets with MTTR far above any job length (>600 h)."""
+    mttr = markets.mttr_hours()
+    assert (mttr > 600).sum() >= len(mttr) * 0.1
+    assert mttr.min() < 600  # and volatile ones too
+
+
+def test_mttr_is_window_over_revocations(markets):
+    rev = markets.revocation_matrix()
+    mttr = markets.mttr_hours()
+    for i in (0, 5, 17):
+        c = rev[i].sum()
+        expect = markets.n_hours / max(c, 1) if c else 2.0 * markets.n_hours
+        assert mttr[i] == pytest.approx(expect)
+
+
+def test_correlation_matrix_properties(markets):
+    corr = markets.correlation_matrix()
+    n = corr.shape[0]
+    assert np.allclose(corr, corr.T)
+    assert (corr >= 0).all() and (corr <= 1).all()
+    rev_counts = markets.revocation_matrix().sum(axis=1)
+    diag = np.diag(corr)
+    assert np.allclose(diag[rev_counts > 0], 1.0)
+
+
+def test_same_zone_markets_more_correlated(markets):
+    """Intra-zone co-revocation should exceed cross-region on average."""
+    corr = markets.correlation_matrix()
+    same_zone, cross_region = [], []
+    ms = markets.markets
+    for i in range(len(ms)):
+        for j in range(i + 1, len(ms)):
+            if ms[i].zone == ms[j].zone:
+                same_zone.append(corr[i, j])
+            elif ms[i].region != ms[j].region:
+                cross_region.append(corr[i, j])
+    assert np.mean(same_zone) > np.mean(cross_region)
+
+
+@given(length=st.floats(0.1, 1000), mttr=st.floats(0.1, 10_000))
+def test_revocation_probability_bounds(length, mttr):
+    v = revocation_probability(length, mttr)
+    assert 0.0 <= v <= 1.0
+
+
+@given(
+    l1=st.floats(0.1, 100), l2=st.floats(0.1, 100), mttr=st.floats(1.0, 10_000)
+)
+def test_revocation_probability_monotone_in_length(l1, l2, mttr):
+    lo, hi = sorted((l1, l2))
+    assert revocation_probability(lo, mttr) <= revocation_probability(hi, mttr)
+
+
+@given(mem=st.floats(1, 192))
+@settings(max_examples=30, deadline=None)
+def test_suitable_servers_fit_and_are_smallest_type(mem, feats):
+    job = Job(length_hours=10, memory_gb=mem)
+    suitable = alg.find_suitable_servers(job, feats)
+    assert suitable, "menu covers up to 192 GB"
+    sizes = {feats.memory_gb[i] for i in suitable}
+    assert len(sizes) == 1
+    size = sizes.pop()
+    assert size >= mem
+    smaller = feats.memory_gb[(feats.memory_gb >= mem) & (feats.memory_gb < size)]
+    assert smaller.size == 0  # smallest fitting type
+
+
+@given(length=st.floats(0.5, 200))
+@settings(max_examples=30, deadline=None)
+def test_alg1_first_choice_has_admissible_lifetime(length, feats):
+    """Step 7/8: the provisioned market has the max MTTR among candidates,
+    and satisfies MTTR ≥ 2L whenever any candidate does."""
+    job = Job(length_hours=length, memory_gb=16)
+    policy = SiwoftPolicy()
+    suitable = alg.find_suitable_servers(job, feats)
+    lifetimes = alg.compute_lifetime(feats, suitable)
+    S = alg.server_based_lifetime(job, lifetimes, policy, feats)
+    choice = alg.highest(S)
+    best = max(lifetimes.values())
+    assert lifetimes[choice] == pytest.approx(best)
+    if best >= 2 * length:
+        assert alg.lifetime_admits(job, lifetimes[choice], policy)
+
+
+def test_low_correlation_restriction(feats):
+    job = Job(length_hours=24, memory_gb=16)
+    policy = SiwoftPolicy()
+    suitable = alg.find_suitable_servers(job, feats)
+    lifetimes = alg.compute_lifetime(feats, suitable)
+    S = alg.server_based_lifetime(job, lifetimes, policy, feats)
+    s = alg.highest(S)
+    W = alg.find_low_correlation(feats, s, policy)
+    S2 = alg.restrict_after_revocation(S, s, W, lifetimes, {s}, feats)
+    assert s not in S2
+    for i in S2[: len(S2) - 1]:
+        if i in W:
+            assert feats.corr[s, i] < policy.correlation_threshold
+    # lifetime-descending order preserved
+    lts = [lifetimes[i] for i in S2 if i in lifetimes]
+    assert lts == sorted(lts, reverse=True)
+
+
+def test_features_from_history_not_future():
+    ms = generate_markets(seed=1, n_hours=24 * 120)
+    hist, fut = split_history_future(ms, 24 * 90)
+    assert hist.n_hours == 24 * 90
+    assert fut.n_hours == 24 * 30
+    assert fut.start_hour == 24 * 90
+    f1 = MarketFeatures.from_history(hist)
+    # features must be computable without touching the future window
+    assert f1.mttr.shape[0] == len(ms.markets)

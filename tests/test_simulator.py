@@ -1,0 +1,151 @@
+"""Simulator-level reproduction of the paper's Fig. 1 claims (C1–C3) plus
+accounting invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Breakdown,
+    CheckpointPolicy,
+    Job,
+    MigrationPolicy,
+    OnDemandPolicy,
+    ReplicationPolicy,
+    Simulator,
+    SiwoftPolicy,
+    generate_markets,
+    split_history_future,
+)
+
+N_SEEDS = 5
+
+
+@pytest.fixture(scope="module")
+def sims():
+    out = []
+    for seed in range(N_SEEDS):
+        ms = generate_markets(seed=seed, n_hours=24 * 90 + 24 * 45)
+        hist, fut = split_history_future(ms, 24 * 90)
+        out.append(Simulator(hist, fut, seed=seed))
+    return out
+
+
+def _avg(sims, job, policy, nrev):
+    times, costs = [], []
+    for s in sims:
+        bd = s.run_job(job, policy, n_revocations=nrev)
+        times.append(bd.wall_time)
+        costs.append(bd.total_cost)
+    return float(np.mean(times)), float(np.mean(costs))
+
+
+JOB = Job(length_hours=24, memory_gb=16)
+
+
+def test_c1_completion_time_ordering(sims):
+    """C1: P-SIWOFT time ≈ on-demand, both < FT (checkpointing)."""
+    t_p, _ = _avg(sims, JOB, SiwoftPolicy(), 0)
+    t_o, _ = _avg(sims, JOB, OnDemandPolicy(), 0)
+    t_f, _ = _avg(sims, JOB, CheckpointPolicy(), 4)
+    assert t_p < t_f
+    assert abs(t_p - t_o) / t_o < 0.10  # near on-demand
+
+
+def test_c2_cost_ordering(sims):
+    """C2: P cost < F cost and < O cost; F ≥ O at high revocations."""
+    _, c_p = _avg(sims, JOB, SiwoftPolicy(), 0)
+    _, c_o = _avg(sims, JOB, OnDemandPolicy(), 0)
+    for nrev in (2, 4, 8, 16):
+        _, c_f = _avg(sims, JOB, CheckpointPolicy(), nrev)
+        assert c_p < c_f, f"nrev={nrev}"
+    assert c_p < c_o
+    _, c_f16 = _avg(sims, JOB, CheckpointPolicy(), 16)
+    assert c_f16 >= c_o  # paper: F significantly higher than O at 8/16
+
+
+def test_c3_ft_overheads_grow_with_memory(sims):
+    """C3: FT checkpoint+recovery time grows with footprint; P-SIWOFT's
+    overhead stays ~flat."""
+    ck_small = ck_big = p_small = p_big = 0.0
+    for s in sims:
+        b1 = s.run_job(Job(24, 8), CheckpointPolicy(), n_revocations=4)
+        b2 = s.run_job(Job(24, 64), CheckpointPolicy(), n_revocations=4)
+        ck_small += b1.time["checkpointing"] + b1.time["recovery"]
+        ck_big += b2.time["checkpointing"] + b2.time["recovery"]
+        p1 = s.run_job(Job(24, 8), SiwoftPolicy())
+        p2 = s.run_job(Job(24, 64), SiwoftPolicy())
+        p_small += p1.total_time - p1.time["execution"]
+        p_big += p2.total_time - p2.time["execution"]
+    assert ck_big > 2 * ck_small
+    assert abs(p_big - p_small) < 0.5 * N_SEEDS  # hours; ~flat
+
+
+def test_c3_ft_overheads_grow_with_revocations(sims):
+    t2 = c2 = t16 = c16 = 0.0
+    for s in sims:
+        b2 = s.run_job(JOB, CheckpointPolicy(), n_revocations=2)
+        b16 = s.run_job(JOB, CheckpointPolicy(), n_revocations=16)
+        t2 += b2.wall_time
+        t16 += b16.wall_time
+        c2 += b2.total_cost
+        c16 += b16.total_cost
+    assert t16 > t2
+    assert c16 > c2
+
+
+def test_siwoft_has_no_ft_components(sims):
+    for s in sims:
+        bd = s.run_job(JOB, SiwoftPolicy())
+        assert bd.time["checkpointing"] == 0.0
+        assert bd.time["recovery"] == 0.0
+
+
+def test_execution_time_equals_job_length(sims):
+    """Progress classification: 'execution' is exactly the useful compute."""
+    for s in sims:
+        for policy, nrev in [
+            (SiwoftPolicy(), 0),
+            (CheckpointPolicy(), 4),
+            (OnDemandPolicy(), 0),
+            (MigrationPolicy(), 3),
+        ]:
+            bd = s.run_job(JOB, policy, n_revocations=nrev)
+            assert bd.time["execution"] == pytest.approx(JOB.length_hours, rel=1e-6)
+
+
+def test_cost_components_sum(sims):
+    bd = sims[0].run_job(JOB, CheckpointPolicy(), n_revocations=4)
+    assert bd.total_cost == pytest.approx(sum(bd.cost.values()))
+    assert bd.cost["billing_buffer"] > 0
+
+
+def test_determinism(sims):
+    a = sims[0].run_job(JOB, CheckpointPolicy(), n_revocations=4)
+    b = sims[0].run_job(JOB, CheckpointPolicy(), n_revocations=4)
+    assert a.time == b.time and a.cost == b.cost
+
+
+def test_replication_cost_scales_with_degree(sims):
+    _, c2 = _avg(sims, JOB, ReplicationPolicy(degree=2), 2)
+    _, c3 = _avg(sims, JOB, ReplicationPolicy(degree=3), 2)
+    assert c3 > c2
+
+
+def test_migration_small_footprint_no_lost_work(sims):
+    """≤4 GB jobs live-migrate within the notice: no re-execution."""
+    job = Job(24, 2.0)
+    for s in sims:
+        bd = s.run_job(job, MigrationPolicy(), n_revocations=3)
+        assert bd.time["re_execution"] == pytest.approx(0.0)
+
+
+def test_hybrid_beats_pure_siwoft_under_forced_revocations():
+    """Beyond-paper: with checkpoints the siwoft policy loses less work when
+    a revocation DOES strike (engineered volatile market set)."""
+    ms = generate_markets(seed=11, n_hours=24 * 90 + 24 * 45, rare_market_fraction=0.0)
+    hist, fut = split_history_future(ms, 24 * 90)
+    sim = Simulator(hist, fut, seed=11)
+    job = Job(48, 16)
+    bd_pure = sim.run_job(job, SiwoftPolicy())
+    bd_hyb = sim.run_job(job, SiwoftPolicy(name="hybrid", ckpt_interval_hours=2.0))
+    if bd_pure.revocations > 0:
+        assert bd_hyb.time["re_execution"] <= bd_pure.time["re_execution"]

@@ -1,0 +1,159 @@
+"""Training loop, optimizer, data pipeline, and watchdog behaviour."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import InputShape, ShardingLayout, TrainConfig, get_arch
+from repro.data import Prefetcher, SyntheticLM
+from repro.models import build_model
+from repro.optim import adamw_update, clip_by_global_norm, global_norm, init_opt_state
+from repro.optim.schedule import linear, warmup_cosine
+from repro.train.loop import Revoked, run_segment
+from repro.train.steps import (
+    build_train_step,
+    chunked_cross_entropy,
+    cross_entropy,
+    init_train_state,
+)
+from repro.train.watchdog import StragglerWatchdog
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    tc = TrainConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(grads, state, params, jnp.float32(0.1), tc)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(warmup_cosine(jnp.int32(s), tc)) for s in range(0, 100, 5)]
+    assert lrs[0] < lrs[1]                       # warming up
+    assert lrs[-1] < tc.learning_rate            # decayed
+    assert max(lrs) <= tc.learning_rate * 1.001
+    assert float(linear(jnp.int32(99), tc)) < tc.learning_rate
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 3), s=st.integers(2, 8), v=st.integers(4, 32),
+    chunk=st.integers(1, 8),
+)
+@settings(max_examples=20, deadline=None)
+def test_chunked_ce_matches_unfused(b, s, v, chunk):
+    key = jax.random.key(b * 100 + s * 10 + v)
+    d = 16
+    x = jax.random.normal(key, (b, s, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, v))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, v)
+    fused = chunked_cross_entropy(x, w, labels, chunk=chunk)
+    ref = cross_entropy(jnp.einsum("bsd,dv->bsv", x, w), labels)
+    np.testing.assert_allclose(float(fused), float(ref), rtol=1e-5)
+
+
+def test_ce_grads_match():
+    key = jax.random.key(0)
+    b, s, d, v = 2, 8, 16, 32
+    x = jax.random.normal(key, (b, s, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, v))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, v)
+    g1 = jax.grad(lambda xx: chunked_cross_entropy(xx, w, labels, chunk=4))(x)
+    g2 = jax.grad(lambda xx: cross_entropy(jnp.einsum("bsd,dv->bsv", xx, w), labels))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_restartable():
+    ds = SyntheticLM(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    a = ds.batch(3)
+    b = ds.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are the shifted tokens
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_data_shards_partition_global_batch():
+    full = SyntheticLM(1000, 16, 4, seed=7)
+    s0 = SyntheticLM(1000, 16, 4, seed=7, shard=0, num_shards=2)
+    s1 = SyntheticLM(1000, 16, 4, seed=7, shard=1, num_shards=2)
+    f = full.batch(5)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([s0.batch(5)["tokens"], s1.batch(5)["tokens"]]), f)
+
+
+def test_prefetcher_in_order():
+    ds = SyntheticLM(100, 8, 2, seed=1)
+    pre = Prefetcher(ds, start_step=0)
+    try:
+        for step in range(4):
+            np.testing.assert_array_equal(pre.next()["tokens"], ds.batch(step)["tokens"])
+    finally:
+        pre.close()
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_straggler():
+    wd = StragglerWatchdog(warmup=3, k_sigma=4.0)
+    flagged = []
+    for i in range(20):
+        wd.observe(i, 0.1 + 0.001 * (i % 3))
+    assert wd.observe(20, 1.0)  # 10× the mean
+    assert 20 in wd.flagged
+    # anomaly must not poison the EWMA
+    assert wd.mean < 0.2
+
+
+def test_watchdog_quiet_on_steady_steps():
+    wd = StragglerWatchdog(warmup=3)
+    for i in range(50):
+        assert not wd.observe(i, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# training loop + revocation
+# ---------------------------------------------------------------------------
+
+def test_loss_decreases_and_revocation_raises(host_mesh):
+    cfg = get_arch("qwen1.5-4b").reduced()
+    model = build_model(cfg)
+    ds = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
+    tc = TrainConfig(total_steps=40, warmup_steps=4, learning_rate=1e-3)
+    state = init_train_state(model, jax.random.key(0))
+    res = run_segment(
+        model, state, ds, host_mesh, tc, ShardingLayout(), num_steps=30
+    )
+    assert np.mean(res.losses[:5]) > np.mean(res.losses[-5:])
+
+    with pytest.raises(Revoked) as e:
+        run_segment(
+            model, res.state, ds, host_mesh, tc, ShardingLayout(),
+            num_steps=10, start_step=30,
+            revoke_at_step=lambda s: s >= 33,
+        )
+    assert e.value.last_step == 32
