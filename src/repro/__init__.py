@@ -1,0 +1,9 @@
+"""spotax: provisioning spot instances without fault-tolerance mechanisms.
+
+A JAX reproduction of the paper's market-selection provisioner driving real
+elastic training: ``repro.core`` implements Algorithm 1 over market traces,
+``repro.dist`` reshards live state across device meshes on revocation, and
+``repro.models``/``repro.train`` provide the sharded execution substrate.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,40 @@
+"""``repro.dist`` — elastic sharding over JAX meshes.
+
+The contract in one paragraph: models describe every parameter with
+*logical* dim names (``repro.models.common.LOGICAL_AXES``) and never name
+mesh axes; :mod:`repro.dist.sharding` resolves logical dims to mesh axes
+through per-layout rule tables (``PARAM_RULES``) with divisibility
+fallbacks (indivisible dim -> drop the axis; a mesh axis is used at most
+once per tensor; ``layers``/``groups`` scan dims are never sharded;
+size-1 dims replicate); :mod:`repro.dist.elastic` moves live state between
+meshes when the spot provisioner shrinks or grows the device pool, so a
+revocation costs a reshard — not a checkpoint restore.
+
+Resharding and resolution are pure functions of ``(specs, mesh, layout)``:
+the same call sites serve the (16, 16) production pod, the (2, 16, 16)
+multi-pod mesh, the elastic subprocess meshes, and the single-CPU host
+mesh in tests.
+"""
+from repro.dist.elastic import replicate, reshard_params, reshard_tree
+from repro.dist.sharding import (
+    PARAM_RULES,
+    batch_shardings,
+    cache_shardings,
+    make_activation_constrainer,
+    opt_state_shardings,
+    param_shardings,
+    resolve_pspec,
+)
+
+__all__ = [
+    "PARAM_RULES",
+    "batch_shardings",
+    "cache_shardings",
+    "make_activation_constrainer",
+    "opt_state_shardings",
+    "param_shardings",
+    "replicate",
+    "reshard_params",
+    "reshard_tree",
+    "resolve_pspec",
+]

@@ -1,0 +1,251 @@
+"""Rule-based sharding-spec resolution: logical dims -> mesh axes.
+
+Every :class:`~repro.models.common.ParamSpec` names its dims with *logical*
+axes (``"embed"``, ``"ffn"``, ``"vocab"``, ...) drawn from
+``repro.models.common.LOGICAL_AXES``.  This module owns the only place where
+logical names meet mesh axis names: a rule table per
+:class:`~repro.config.base.ShardingLayout` preset maps each logical dim to an
+ordered tuple of candidate mesh axes, and :func:`resolve_pspec` turns one
+``(shape, dim_names)`` pair into a :class:`jax.sharding.PartitionSpec` under
+the fallback discipline below.
+
+Resolution contract (enforced by ``tests/test_sharding.py``):
+
+* **divisibility** — a mesh axis (or joint axis tuple) is only used when its
+  size divides the dim exactly; otherwise axes are dropped (left-first for
+  joint tuples) until the remainder divides, down to ``None`` (replicated).
+* **one use per tensor** — a mesh axis appears at most once in a spec; dims
+  are resolved left-to-right and later dims skip already-used axes.
+* **scan dims** — ``"layers"`` / ``"groups"`` (lax.scan stacking dims) are
+  never sharded: every device runs every layer.
+* **degenerate dims** — a dim of size 1 (e.g. batch=1 decode) replicates.
+
+Rule values are tuples so one logical dim can shard jointly over several
+mesh axes (``"batch" -> ("pod", "data")`` on the 2-pod mesh); axes missing
+from the mesh are simply ignored, which is how the same table serves the
+(16, 16) production mesh, the (2, 16, 16) multi-pod mesh, and the (1, 1)
+host mesh in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ShardingLayout
+from repro.models.common import LOGICAL_AXES, SCAN_AXES, ParamSpec
+
+# Mesh axes that carry data parallelism, outermost first.
+DATA_AXES = ("pod", "data")
+
+Rule = Dict[str, Tuple[str, ...]]
+
+
+def _rule(**overrides: Tuple[str, ...]) -> Rule:
+    """Baseline FSDP+TP rule set with per-logical-dim overrides."""
+    base: Rule = {
+        # embedding / residual width shards over the data axis (FSDP-style
+        # parameter sharding: the gradient all-reduce doubles as the gather)
+        "embed": ("data",),
+        "enc_embed": ("data",),
+        "vit_embed": ("model",),
+        # big per-layer matmul dims shard over the model (TP) axis
+        "vocab": ("model",),
+        "q_dim": ("model",),
+        "kv_dim": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "ssm_inner": ("model",),
+        "dt_rank": (),
+        "ssm_state": (),
+        "conv": (),
+        # activation dims
+        "batch": ("pod", "data"),
+        "seq": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+    }
+    base.update(overrides)
+    unknown = set(base) - set(LOGICAL_AXES)
+    assert not unknown, f"rules name unknown logical dims: {unknown}"
+    return base
+
+
+PARAM_RULES: Dict[str, Rule] = {
+    "baseline": _rule(),
+    # pure tensor parallelism: params replicated across data shards
+    "tp_only": _rule(embed=(), enc_embed=()),
+    # shard everything possible over data first, joint data+model on ffn
+    "fsdp_heavy": _rule(
+        vocab=("data", "model"), ffn=("data", "model"), experts=()
+    ),
+    # tensor-parallel experts: replicate the expert dim, split each expert's
+    # ffn over the model axis (all-reduce instead of all-to-all)
+    "moe_tp": _rule(experts=(), ffn=("model",)),
+}
+
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _fit_axes(dim: int, candidates, sizes: Dict[str, int], used: set):
+    """The fallback discipline, shared by params and activation constraints:
+    keep only mesh axes not yet used by this tensor, then drop axes
+    (outermost first) until the joint size divides the dim. Marks the
+    surviving axes used and returns them as a (possibly empty) tuple."""
+    axes = [a for a in candidates if a in sizes and a not in used]
+    while axes and dim % math.prod(sizes[a] for a in axes):
+        axes = axes[1:]
+    used.update(axes)
+    return tuple(axes)
+
+
+def _spec_entry(axes):
+    return None if not axes else axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def resolve_pspec(
+    shape: Sequence[int],
+    dim_names: Sequence[Optional[str]],
+    rules: Rule,
+    mesh,
+) -> P:
+    """Resolve one tensor's logical dims to a PartitionSpec on ``mesh``."""
+    assert len(shape) == len(dim_names), (shape, dim_names)
+    sizes = _mesh_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, dim_names):
+        if name is None or name in SCAN_AXES or dim <= 1:
+            parts.append(None)
+            continue
+        cand = rules.get(name, ())
+        if isinstance(cand, str):
+            cand = (cand,)
+        parts.append(_spec_entry(_fit_axes(dim, cand, sizes, used)))
+    return P(*parts)
+
+
+def _spec_shardings(specs: Any, mesh, rules: Rule) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, resolve_pspec(s.shape, s.axes, rules, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _rules_for(layout: Union[ShardingLayout, str, Rule], key: str = "param_rules") -> Rule:
+    if isinstance(layout, dict):
+        return layout
+    if isinstance(layout, str):
+        return PARAM_RULES[layout]
+    name = getattr(layout, key, "") or layout.param_rules
+    return PARAM_RULES[name]
+
+
+def param_shardings(specs: Any, mesh, layout: Union[ShardingLayout, str]) -> Any:
+    """NamedSharding pytree (same structure as ``specs``) for the params."""
+    return _spec_shardings(specs, mesh, _rules_for(layout))
+
+
+def opt_state_shardings(specs: Any, mesh, layout: ShardingLayout) -> Any:
+    """Shardings for one optimizer-moment tree (Adam m/v mirror the params).
+
+    ``layout.opt_rules`` overrides the param rules — e.g. ZeRO-1 keeps
+    params tp_only but moments fully sharded ("baseline").
+    """
+    return _spec_shardings(specs, mesh, _rules_for(layout, key="opt_rules"))
+
+
+def cache_shardings(cache_specs: Any, mesh, layout: ShardingLayout) -> Any:
+    """Shardings for the decode cache. Cache specs carry their own logical
+    dims (``batch``/``seq``/``kv_heads``/...); the seq (slot) dim shards over
+    the model axis — ``cache_len_for`` rounds it to a multiple of 16 so this
+    always divides on the production mesh."""
+    return _spec_shardings(cache_specs, mesh, _rules_for(layout))
+
+
+def batch_shardings(inputs: Dict[str, Any], mesh) -> Dict[str, NamedSharding]:
+    """Input-batch shardings: leading dim over the data axes, rest replicated.
+
+    A batch of 1 (single-sequence decode) replicates — the divisibility
+    fallback in :func:`resolve_pspec` makes that automatic.
+    """
+    rules = PARAM_RULES["baseline"]
+
+    def one(x) -> NamedSharding:
+        names: Tuple[Optional[str], ...] = ("batch",) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(mesh, resolve_pspec(x.shape, names, rules, mesh))
+
+    return {k: one(v) for k, v in inputs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+
+def _concat_axes(*entries):
+    """Merge spec entries into one PartitionSpec slot (str | tuple | None)."""
+    flat = []
+    for e in entries:
+        if e is None:
+            continue
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    if not flat:
+        return None
+    return flat[0] if len(flat) == 1 else tuple(flat)
+
+
+def make_activation_constrainer(mesh, layout: ShardingLayout, cfg: ModelConfig):
+    """Build the ``constrain(x, name) -> x`` hook threaded through the model.
+
+    Named sites (see ``RunOpts.constrain`` call sites):
+
+    * ``"activation"``  — residual stream (B, S, d): batch over data axes,
+      sequence over the model axis when ``sequence_shard_activations``
+      (Megatron-SP): attention/MLP FLOPs then partition over BOTH mesh axes.
+    * ``"attn_qkv"``    — K/V (B, S, KVH, hd): gathered over sequence when
+      ``attn_gather_kv`` (one all-gather per layer instead of a ring).
+    * ``"loss_input"``  — pre-unembed hiddens: sequence gathered so the
+      chunked CE scan slices an unsharded dim.
+    * ``"moe_buffer"``  — (G, E, C, d) expert buffers: groups follow the
+      batch shards, experts follow the model axis (expert parallelism).
+
+    Constraints silently drop mesh axes that do not divide the concrete dim
+    (same fallback discipline as :func:`resolve_pspec`), so the constrainer
+    is safe on the (1, 1) host mesh and reduced smoke shapes.
+    """
+    sizes = _mesh_sizes(mesh)
+    data = tuple(a for a in DATA_AXES if a in sizes)
+    data_entry = _concat_axes(data if data else None)
+    model = "model" if "model" in sizes else None
+    seq_entry = model if layout.sequence_shard_activations else None
+
+    def _fit(x, parts):
+        fitted, used = [], set()
+        for dim, part in zip(x.shape, parts):
+            cand = part if isinstance(part, tuple) else (part,) if part else ()
+            fitted.append(_spec_entry(_fit_axes(dim, cand, sizes, used)))
+        return P(*fitted)
+
+    def constrain(x, name: str):
+        if name == "activation" and x.ndim == 3:
+            parts = (data_entry, seq_entry, None)
+        elif name == "loss_input" and x.ndim == 3:
+            parts = (data_entry, None, None)
+        elif name == "attn_qkv" and x.ndim == 4:
+            kv_seq = None if layout.attn_gather_kv else seq_entry
+            parts = (data_entry, kv_seq, None, None)
+        elif name == "moe_buffer" and x.ndim == 4:
+            parts = (data_entry, model, None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, _fit(x, parts))
+        )
+
+    return constrain

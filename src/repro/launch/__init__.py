@@ -1,0 +1,1 @@
+"""Launch entry points: meshes, dry-run lowering, roofline, serving, training."""

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 # Logical axis names used across the model zoo. The sharding rules tables in
-# repro.dist.sharding map these to mesh axes.
+# repro.dist.sharding map these to mesh axes; rule tables may only name axes
+# listed here (enforced at rule-table construction).
 LOGICAL_AXES = (
     "layers",      # scan dim — never sharded
     "groups",      # xLSTM super-block scan dim — never sharded
@@ -45,6 +46,10 @@ LOGICAL_AXES = (
     "seq",         # sequence dim (activations only)
     "batch",       # batch dim (activations only)
 )
+
+# lax.scan stacking dims: every device owns every layer, so these are never
+# mapped to a mesh axis regardless of the rule table.
+SCAN_AXES = ("layers", "groups")
 
 
 @dataclasses.dataclass(frozen=True)

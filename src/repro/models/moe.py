@@ -19,6 +19,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import ModelConfig
 from repro.models import common
@@ -45,10 +46,67 @@ def _capacity(cfg: ModelConfig, group_tokens: int) -> int:
     return max(c, 1)
 
 
+def _dispatch_experts(params, xk, a, onehot, keep, cap: int, cfg, constrain):
+    """Shared expert-dispatch core: scatter assignments into capacity-``cap``
+    per-expert buffers, run the expert FFN, gather back.
+
+    xk: (G, A, d) one row per assignment; a: (G, A) expert ids;
+    onehot: (G, A, E) int32 of ``a``; keep: (G, A) bool pre-drop decision
+    (all-True for the forward, the counter comparison for decode).
+    Dropped assignments consume no buffer slots. Returns
+    (picked (G, A, d) expert outputs, keep after buffer-overflow drops).
+    """
+    G, A, d = xk.shape
+    E = cfg.moe.num_experts
+    ct = jnp.dtype(cfg.dtype)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot * keep[..., None], axis=1) - 1, a[..., None], axis=-1
+    )[..., 0]                                         # (G, A)
+    keep = keep & (pos < cap)
+    dest = jnp.where(keep, a * cap + pos, E * cap)    # E*cap = drop slot
+    buf = jnp.zeros((G, E * cap + 1, d), ct)
+    buf = jax.vmap(lambda b, i, v: b.at[i].add(v))(buf, dest, xk.astype(ct))
+    expert_in = buf[:, : E * cap].reshape(G, E, cap, d)
+    expert_in = constrain(expert_in, "moe_buffer")    # groups follow the batch
+
+    # expert FFN (batched einsum over the expert dim -> EP under GSPMD)
+    if cfg.gated_mlp:
+        g = jnp.einsum("gecd,edf->gecf", expert_in, params["wi_gate"].astype(ct))
+        u = jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"].astype(ct))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"].astype(ct))
+        )
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(ct))
+    expert_out = constrain(expert_out, "moe_buffer")
+
+    flat = jnp.concatenate(
+        [expert_out.reshape(G, E * cap, d), jnp.zeros((G, 1, d), ct)], axis=1
+    )
+    picked = jnp.take_along_axis(flat, dest[..., None], axis=1)  # (G, A, d)
+    return picked, keep
+
+
+def moe_load_spec(cfg: ModelConfig, batch: int) -> ParamSpec:
+    """Per-sequence expert assignment counters carried in the decode cache.
+
+    ``load[b, e]`` counts how many assignments sequence ``b`` has routed to
+    expert ``e`` so far — kept AND capacity-dropped, matching the cumsum
+    positions a full forward would compute. :func:`moe_decode_block` replays
+    the forward's keep/drop decision from these counters, which is what makes
+    autoregressive decode consistent with the teacher-forced forward.
+    """
+    assert cfg.moe is not None
+    return ParamSpec(
+        (batch, cfg.moe.num_experts), ("batch", None), init="zeros", dtype="int32"
+    )
+
+
 def moe_block(
     params: Dict, x: jax.Array, cfg: ModelConfig, constrain=None
-) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar, load (B, E) int32)."""
     if constrain is None:
         constrain = lambda t, name: t
     m = cfg.moe
@@ -78,40 +136,88 @@ def moe_block(
     mean_prob = jnp.mean(probs, axis=(0, 1))
     aux = m.aux_loss_weight * E * jnp.sum(density * mean_prob)
 
-    # --- capacity-bounded position of each assignment within its expert
+    # --- flatten to one row per assignment
+    # token t appears K times contiguously -> order (t0k0,t0k1,t1k0,...)
     a = top_i.reshape(G, N * K)                       # expert id per assignment
     onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)    # (G, N*K, E)
-    pos = jnp.take_along_axis(
-        jnp.cumsum(onehot, axis=1) - 1, a[..., None], axis=-1
-    )[..., 0]                                          # (G, N*K)
-    keep = pos < C
-    dest = jnp.where(keep, a * C + pos, E * C)        # E*C = drop slot
-
-    # --- scatter tokens into (G, E*C [+1 drop], d) expert buffers
-    # token t appears K times contiguously -> order (t0k0,t0k1,t1k0,...)
     xk = jnp.broadcast_to(xg[:, :, None, :], (G, N, K, d)).reshape(G, N * K, d)
-    buf = jnp.zeros((G, E * C + 1, d), ct)
-    buf = jax.vmap(lambda b, i, v: b.at[i].add(v))(buf, dest, xk.astype(ct))
-    expert_in = buf[:, : E * C].reshape(G, E, C, d)
-    expert_in = constrain(expert_in, "moe_buffer")  # groups follow the batch
 
-    # --- expert FFN (batched einsum over the expert dim -> EP under GSPMD)
-    if cfg.gated_mlp:
-        g = jnp.einsum("gecd,edf->gecf", expert_in, params["wi_gate"].astype(ct))
-        u = jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"].astype(ct))
-        h = jax.nn.silu(g) * u
+    # per-sequence assignment counters (B, E) for the decode cache
+    if S > 1:
+        load = jnp.sum(onehot, axis=1)                       # groups ARE sequences
     else:
-        h = jax.nn.gelu(
-            jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"].astype(ct))
-        )
-    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(ct))
-    expert_out = constrain(expert_out, "moe_buffer")
+        load = jnp.sum(onehot.reshape(B, K, E), axis=1)      # one token per seq
 
-    # --- gather back and combine with router weights
-    flat = jnp.concatenate(
-        [expert_out.reshape(G, E * C, d), jnp.zeros((G, 1, d), ct)], axis=1
+    # --- dispatch with capacity C; drops come from buffer positions only
+    picked, keep = _dispatch_experts(
+        params, xk, a, onehot, jnp.ones_like(a, bool), C, cfg, constrain
     )
-    picked = jnp.take_along_axis(flat, dest[..., None], axis=1)  # (G, N*K, d)
     w = (top_w.reshape(G, N * K) * keep).astype(ct)
     out = jnp.sum(picked.reshape(G, N, K, d) * w.reshape(G, N, K, 1), axis=2)
-    return out.reshape(B, S, d), aux
+    return out.reshape(B, S, d), aux, load
+
+
+def moe_decode_block(
+    params: Dict,
+    x: jax.Array,
+    load: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    constrain=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token MoE step with forward-consistent capacity routing.
+
+    x: (B, 1, d); load: (B, E) int32 counters from :func:`moe_load_spec`;
+    pos: scalar int32 absolute position. Returns (out (B, 1, d), new load).
+
+    A full forward over a sequence of length N drops an assignment when its
+    arrival position within its expert (the per-sequence cumsum) reaches
+    C(N) = max(floor(k · cf · N / E), 1). The counters carry exactly that
+    arrival position across steps, so decoding token ``pos`` keeps/drops the
+    same assignments a length-(pos+1) forward would — without them, decode
+    routes with fresh capacity and diverges from the forward whenever an
+    expert overflows (the seed's phi3.5-moe prefill/decode failure).
+
+    The scatter packing still bounds the expert buffers with a static
+    capacity derived from the *decode batch* (cf-scaled over B tokens).
+    Only counter-kept assignments consume slots, but when MORE than
+    ``c_pack`` sequences route a kept assignment to the same expert in one
+    step, the overflow IS dropped — a cross-sequence deviation from the
+    teacher-forced forward that per-sequence packing groups would remove
+    (ROADMAP open item). B=1 decode is always exact.
+    """
+    if constrain is None:
+        constrain = lambda t, name: t
+    m = cfg.moe
+    B, S, d = x.shape
+    assert S == 1, "moe_decode_block handles one token per step"
+    E, K = m.num_experts, m.top_k
+    ct = jnp.dtype(cfg.dtype)
+
+    # --- routing (f32 numerics, same as the full forward)
+    logits = common.dense(x[:, 0], params["router"], "float32")  # (B, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                       # (B, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # forward-equivalent capacity for a sequence of length pos+1
+    c_seq = jnp.maximum(
+        jnp.floor(K * m.capacity_factor * (pos + 1).astype(jnp.float32) / E),
+        1.0,
+    ).astype(jnp.int32)
+    prior = jnp.take_along_axis(load, top_i, axis=1)             # (B, K)
+    keep = prior < c_seq
+    a = top_i.reshape(1, B * K)
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)               # (1, B*K, E)
+    new_load = load + jnp.sum(onehot.reshape(B, K, E), axis=1).astype(load.dtype)
+
+    # --- pack all B decode tokens into per-expert buffers (one global group);
+    # counter-dropped assignments consume no slots (handled in the core)
+    c_pack = max(int(np.ceil(K * m.capacity_factor * B / E)), 1)
+    xk = jnp.broadcast_to(x.reshape(B, 1, d), (B, K, d)).reshape(1, B * K, d)
+    picked, keep_flat = _dispatch_experts(
+        params, xk, a, onehot, keep.reshape(1, B * K), c_pack, cfg, constrain
+    )
+    w = (top_w.reshape(1, B * K) * keep_flat).astype(ct)
+    out = jnp.sum(picked.reshape(B, K, d) * w.reshape(B, K, 1), axis=1)
+    return out.reshape(B, 1, d), new_load

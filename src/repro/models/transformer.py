@@ -170,6 +170,8 @@ def cache_specs(
         one.update(layers.make_cache_specs(cfg, batch, T, int8=int8))
     if cfg.block == BlockKind.HYBRID_PARALLEL:
         one["ssm"] = ssm.init_state(cfg, batch)
+    if cfg.block == BlockKind.MOE:
+        one["moe_load"] = moe.moe_load_spec(cfg, batch)
     out: Dict[str, Any] = {"blocks": common.stacked(one, cfg.num_layers)}
     if cfg.encoder_layers:
         out["memory"] = ParamSpec(
@@ -231,13 +233,16 @@ def _apply_block_full(
             h = layers.norm(params["ln_cross"], x, cfg)
             x = x + layers.cross_attention_layer(params["cross"], h, memory, cfg)
         h = layers.norm(params["ln2"], x, cfg)
+        moe_load = None
         if b == BlockKind.MOE:
-            m_out, aux = moe.moe_block(params["moe"], h, cfg, opts.constrain)
+            m_out, aux, moe_load = moe.moe_block(params["moe"], h, cfg, opts.constrain)
             x = x + m_out
         else:
             x = x + layers.mlp(params["mlp"], h, cfg)
         if want_cache:
             cache_out = _kv_to_cache(kv, positions, cfg, cache_len, opts.int8_kv_cache)
+            if moe_load is not None:
+                cache_out["moe_load"] = moe_load
 
     elif b == BlockKind.HYBRID_PARALLEL:
         h = layers.norm(params["ln1"], x, cfg)
@@ -493,7 +498,8 @@ def prefill(params, batch, cfg: ModelConfig, opts: RunOpts, cache_seq_len: int):
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, opts: RunOpts):
-    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (absolute).
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 — the TEXT
+    position of the new token (callers count generated text tokens).
 
     Returns (logits (B, 1, V), new cache).
     """
@@ -501,6 +507,11 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, opts: RunOpts):
     x = jnp.take(params["embed"], tokens, axis=0).astype(ct)
     if cfg.embed_scale:
         x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    if cfg.vision_tokens:
+        # prefill ran over [vision prefix | text], so cache slots and RoPE
+        # angles are prefix-absolute; without this offset the new token
+        # overwrites a live slot and masks out every later prefill position
+        pos = pos + cfg.vision_tokens
 
     if cfg.block in (BlockKind.MLSTM, BlockKind.SLSTM):
         def body(xx, pc):
@@ -534,7 +545,9 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, opts: RunOpts):
                 new_c = dict(kv_cache, ssm=ssm_state)
             else:
                 attn_out, new_c = layers.decode_attention(
-                    p["attn"], {k: v_ for k, v_ in c.items() if k != "ssm"}, h, pos, cfg
+                    p["attn"],
+                    {k: v_ for k, v_ in c.items() if k not in ("ssm", "moe_load")},
+                    h, pos, cfg,
                 )
                 xx = xx + attn_out
                 if cfg.block == BlockKind.ENCDEC:
@@ -542,8 +555,11 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, opts: RunOpts):
                     xx = xx + layers.cross_attention_layer(p["cross"], h, memory, cfg)
             h = layers.norm(p["ln2"], xx, cfg)
             if cfg.block == BlockKind.MOE:
-                m_out, _ = moe.moe_block(p["moe"], h, cfg, opts.constrain)
+                m_out, new_load = moe.moe_decode_block(
+                    p["moe"], h, c["moe_load"], pos, cfg, opts.constrain
+                )
                 xx = xx + m_out
+                new_c = dict(new_c, moe_load=new_load)
             else:
                 xx = xx + layers.mlp(p["mlp"], h, cfg)
             return xx, new_c

@@ -1,6 +1,93 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real (1-CPU) device set; only launch/dryrun.py forces 512 devices.
+
+Also registers a minimal ``hypothesis`` fallback when the real package is
+not installed (see ``_install_hypothesis_fallback``): the property tests in
+test_accounting / test_core_market / test_train_and_data then run against a
+small deterministic random sample instead of failing at import. CI installs
+the real hypothesis via the ``test`` extra (pyproject.toml); the fallback
+only exists so a bare environment can still run the full suite.
 """
+
+
+def _install_hypothesis_fallback():
+    import functools
+    import inspect
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.example = draw
+
+    def floats(min_value, max_value, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # boundary values first-class, like hypothesis' shrink targets
+            if rng.random() < 0.15:
+                return lo if rng.random() < 0.5 else hi
+            return rng.uniform(lo, hi)
+
+        return _Strategy(draw)
+
+    def integers(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def settings(max_examples=25, **_kw):
+        def deco(f):
+            f._fallback_max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            sig = inspect.signature(f)
+            rest = [
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                # read at call time so @settings works above OR below @given
+                # (wraps copies f.__dict__, settings-above sets it on wrapper)
+                n = getattr(wrapper, "_fallback_max_examples", 25)
+                rng = random.Random(f.__qualname__)  # deterministic per test
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    f(*args, **kwargs, **drawn)
+
+            # pytest must see only the non-strategy params (fixtures);
+            # __signature__ wins over __wrapped__ in inspect.signature
+            wrapper.__signature__ = sig.replace(parameters=rest)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given, mod.settings = given, settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.floats, st_mod.integers, st_mod.lists = floats, integers, lists
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_fallback()
+
 import jax
 import numpy as np
 import pytest

@@ -73,12 +73,18 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent(
 
 
 def test_elastic_reshard_across_meshes_subprocess():
+    # inherit the parent env (JAX_PLATFORMS etc. — a bare env makes the PJRT
+    # plugin probe for TPU metadata and hang); only PYTHONPATH is forced
+    import os
+    import pathlib
+
+    repo = pathlib.Path(__file__).resolve().parents[1]
     res = subprocess.run(
         [sys.executable, "-c", MULTI_DEVICE_SCRIPT],
         capture_output=True,
         text=True,
         timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
-        cwd="/root/repo",
+        env={**os.environ, "PYTHONPATH": str(repo / "src")},
+        cwd=str(repo),
     )
     assert "ELASTIC_OK" in res.stdout, res.stdout + res.stderr
