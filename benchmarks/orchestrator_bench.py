@@ -1,10 +1,20 @@
 """Orchestrated spot-training goodput: P-SIWOFT vs checkpoint-FT vs hybrid
 driving a REAL (reduced) JAX training run under market revocations.
 
-CSV: mode,useful_steps,wasted_steps,revocations,goodput,cost_usd,final_loss
+Byte-level thesis check (paper: "no FT mechanism needed"): the CSV carries
+``reshard_bytes`` (bytes a live cross-mesh reshard actually moved on
+revocation, siwoft/hybrid) next to ``restore_bytes`` (bytes the checkpoint
+baseline pulled through remote storage) — siwoft must move strictly fewer
+bytes than checkpoint restores, and the run aborts if it doesn't.
+
+CSV: mode,useful_steps,wasted_steps,revocations,goodput,cost_usd,
+    reshard_bytes,restore_bytes,reshard_usd,recovery_usd,final_loss
+
+    python benchmarks/orchestrator_bench.py [--quick] [--steps N]
 """
 from __future__ import annotations
 
+import argparse
 import tempfile
 
 import jax
@@ -17,17 +27,22 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, steps: int = 0) -> None:
     cfg = get_arch("qwen3-4b").reduced()
     model = build_model(cfg)
     ds = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
     mesh = make_host_mesh()
     ms = generate_markets(seed=3, n_hours=24 * 90 + 24 * 30)
     hist, fut = split_history_future(ms, 24 * 90)
-    steps = 30 if quick else 60
+    custom_steps = bool(steps)
+    steps = steps or (30 if quick else 60)
     tc = TrainConfig(total_steps=steps * 2, warmup_steps=5)
 
-    print("mode,useful_steps,wasted_steps,revocations,goodput,cost_usd,final_loss")
+    print(
+        "mode,useful_steps,wasted_steps,revocations,goodput,cost_usd,"
+        "reshard_bytes,restore_bytes,reshard_usd,recovery_usd,final_loss"
+    )
+    reports = {}
     for mode in ("siwoft", "checkpoint", "hybrid"):
         with tempfile.TemporaryDirectory() as d:
             orch = SpotTrainingOrchestrator(
@@ -36,11 +51,35 @@ def main(quick: bool = False) -> None:
                 ckpt_every=5, ft_revocations=2, seed=0,
             )
             rep = orch.run(steps)
+        reports[mode] = rep
         print(
             f"{mode},{rep.useful_steps},{rep.wasted_steps},{rep.revocations},"
-            f"{rep.goodput:.3f},{rep.cost_dollars:.4f},{rep.losses[-1]:.4f}"
+            f"{rep.goodput:.3f},{rep.cost_dollars:.4f},"
+            f"{rep.reshard_bytes},{rep.restore_bytes},"
+            f"{rep.breakdown.cost['reshard']:.6f},"
+            f"{rep.breakdown.cost['recovery']:.6f},"
+            f"{rep.losses[-1]:.4f}"
         )
+
+    # the paper's thesis, in bytes: a live reshard moves less than a
+    # checkpoint restore pulls through storage. A custom --steps can be so
+    # short that the injected revocations precede the first checkpoint
+    # (nothing to restore) — skip the degenerate comparison with a note
+    # instead of asserting; default/quick runs always enforce it.
+    if not custom_steps or reports["checkpoint"].restore_bytes > 0:
+        assert reports["siwoft"].reshard_bytes < reports["checkpoint"].restore_bytes, (
+            reports["siwoft"].reshard_bytes,
+            reports["checkpoint"].restore_bytes,
+        )
+        assert reports["checkpoint"].restore_bytes > 0
+    else:
+        print("# note: no checkpoint restore at this step count; "
+              "byte comparison skipped")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="30-step smoke run")
+    ap.add_argument("--steps", type=int, default=0, help="override step count")
+    args = ap.parse_args()
+    main(quick=args.quick, steps=args.steps)

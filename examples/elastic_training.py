@@ -49,7 +49,10 @@ def main():
         print(f"{mode:12s} {rep.useful_steps:6d} {rep.wasted_steps:6d} "
               f"{rep.revocations:4d} {rep.goodput:7.2f} {rep.cost_dollars:8.4f} "
               f"{rep.markets_used}")
+        print(f"{'':12s} reshard={rep.reshard_bytes}B restore={rep.restore_bytes}B "
+              f"mesh_shapes={sorted(set(rep.mesh_shapes))}")
     print("\nsiwoft re-provisions uncorrelated high-MTTR markets (no FT overhead);")
+    print("a revocation is a live cross-mesh reshard (bytes moved, not restored);")
     print("checkpoint pays ckpt+restore+re-execution; hybrid combines both wins.")
 
 

@@ -9,6 +9,8 @@ accounting.py   per-billing-cycle cost/time breakdowns
 orchestrator.py bridges the provisioner to the real JAX training loop
 """
 from repro.core.market import (
+    INSTANCE_MENU,
+    InstanceShape,
     Market,
     MarketSet,
     generate_markets,
@@ -31,6 +33,7 @@ from repro.core.simulator import Simulator
 from repro.core.accounting import Breakdown
 
 __all__ = [
+    "INSTANCE_MENU", "InstanceShape",
     "Market", "MarketSet", "generate_markets", "load_csv_traces",
     "revocation_probability", "split_history_future",
     "CheckpointPolicy", "Job", "MigrationPolicy", "OnDemandPolicy",

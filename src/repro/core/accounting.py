@@ -3,11 +3,19 @@
 Every simulated job produces a :class:`Breakdown` with the exact stacked
 components the paper plots:
 
-time components  : execution, re_execution, checkpointing, recovery, startup
-cost components  : the same five (time × in-effect spot price) plus
+time components  : execution, re_execution, checkpointing, recovery,
+                   reshard, startup
+cost components  : the same six (time × in-effect spot price) plus
                    billing_buffer — the cost of the unused remainder of each
                    started billing cycle (EC2 bills whole hours; the paper
                    calls these "buffer costs of billing cycles").
+
+``reshard`` (beyond the paper) is the live cross-mesh migration a spot
+revocation triggers in siwoft/hybrid modes: bytes actually moved (see
+``repro.dist.meshplan.reshard_bytes``) over the destination market's
+interconnect. It sits head-to-head with ``recovery`` (checkpoint restore
+through remote storage) in Fig-1-style breakdowns, so the "no-FT is
+cheaper" comparison is priced in bytes and dollars, not asserted.
 """
 from __future__ import annotations
 
@@ -15,7 +23,9 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-TIME_COMPONENTS = ("execution", "re_execution", "checkpointing", "recovery", "startup")
+TIME_COMPONENTS = (
+    "execution", "re_execution", "checkpointing", "recovery", "reshard", "startup",
+)
 COST_COMPONENTS = TIME_COMPONENTS + ("billing_buffer",)
 
 BILLING_CYCLE_HOURS = 1.0

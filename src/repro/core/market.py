@@ -28,15 +28,41 @@ import numpy as np
 
 HOURS_3_MONTHS = 24 * 90  # one billing cycle per hour, 3-month feature window
 
-# EC2-ish instance menu: (type, memory GiB, on-demand $/h). The last row is
-# the paper's experiment instance (m5ad.12xlarge, 48 vCPU / 192 GiB).
-INSTANCE_MENU: Tuple[Tuple[str, int, float], ...] = (
-    ("m5.large", 8, 0.096),
-    ("m5.xlarge", 16, 0.192),
-    ("m5.2xlarge", 32, 0.384),
-    ("m5.4xlarge", 64, 0.768),
-    ("m5.8xlarge", 128, 1.536),
-    ("m5ad.12xlarge", 192, 2.472),
+
+@dataclasses.dataclass(frozen=True)
+class InstanceShape:
+    """One instance-menu entry: a *mesh shape*, not just a price point.
+
+    ``memory_gb`` is per accelerator device; a job fits when its sharded
+    state fits ``memory_gb × device_count``. ``interconnect_gbps`` is the
+    device-to-device bandwidth (GB/s) a live reshard moves bytes over —
+    the denominator of the ``reshard`` time/cost component.
+    """
+
+    instance_type: str
+    memory_gb: int               # GiB per device
+    on_demand_price: float       # $/h for the whole instance
+    device_count: int = 1        # accelerators per instance
+    interconnect_gbps: float = 10.0  # GB/s device interconnect
+
+    @property
+    def total_memory_gb(self) -> float:
+        return float(self.memory_gb * self.device_count)
+
+
+# EC2-ish accelerator menu. Deviation from the paper (which models CPU
+# instances as memory sizes only): each entry is a mesh shape — device
+# count and interconnect bandwidth — so heterogeneous-type provisioning
+# (Voorsluys & Buyya; Qu et al.) has a real degree of freedom. Several
+# entries share a total-memory class at different device counts so the
+# suitable set spans *different mesh shapes* for the same job.
+INSTANCE_MENU: Tuple[InstanceShape, ...] = (
+    InstanceShape("m5.xlarge", 16, 0.192, device_count=1, interconnect_gbps=10.0),
+    InstanceShape("m5.2xlarge", 32, 0.384, device_count=1, interconnect_gbps=10.0),
+    InstanceShape("g5.2xlarge", 16, 0.402, device_count=2, interconnect_gbps=25.0),
+    InstanceShape("g5.12xlarge", 16, 0.804, device_count=4, interconnect_gbps=25.0),
+    InstanceShape("p3.16xlarge", 16, 1.608, device_count=8, interconnect_gbps=50.0),
+    InstanceShape("p4d.24xlarge", 40, 2.472, device_count=8, interconnect_gbps=60.0),
 )
 
 # 6 regions × 4 AZs = 24 markets per instance type. EC2 reality is ~75+;
@@ -51,14 +77,25 @@ ZONES_PER_REGION = 4
 
 @dataclasses.dataclass(frozen=True)
 class Market:
-    """One (instance type × availability zone) spot market."""
+    """One (instance type × availability zone) spot market.
+
+    Carries the menu entry's topology (``device_count``,
+    ``interconnect_gbps``) so the provisioner can treat the market as a
+    mesh shape and price a live reshard onto it.
+    """
 
     market_id: int
     instance_type: str
     region: str
     zone: str
-    memory_gb: int
+    memory_gb: int                   # GiB per device
     on_demand_price: float
+    device_count: int = 1
+    interconnect_gbps: float = 10.0
+
+    @property
+    def total_memory_gb(self) -> float:
+        return float(self.memory_gb * self.device_count)
 
 
 @dataclasses.dataclass
@@ -129,7 +166,7 @@ def generate_markets(
     n_hours: int = HOURS_3_MONTHS,
     regions: Sequence[str] = REGIONS,
     zones_per_region: int = ZONES_PER_REGION,
-    menu: Sequence[Tuple[str, int, float]] = INSTANCE_MENU,
+    menu: Sequence[InstanceShape] = INSTANCE_MENU,
     rare_market_fraction: float = 0.25,
 ) -> MarketSet:
     """Markets = |regions| × zones × |menu|; hourly prices for ``n_hours``.
@@ -150,8 +187,19 @@ def generate_markets(
     for region in regions:
         for z in range(zones_per_region):
             zone = f"{region}{chr(ord('a') + z)}"
-            for (itype, mem, od) in menu:
-                markets.append(Market(mid, itype, region, zone, mem, od))
+            for shape in menu:
+                markets.append(
+                    Market(
+                        mid,
+                        shape.instance_type,
+                        region,
+                        zone,
+                        shape.memory_gb,
+                        shape.on_demand_price,
+                        device_count=shape.device_count,
+                        interconnect_gbps=shape.interconnect_gbps,
+                    )
+                )
                 mid += 1
 
     n = len(markets)
@@ -206,13 +254,26 @@ def split_history_future(ms: MarketSet, history_hours: int) -> Tuple[MarketSet, 
 
 def load_csv_traces(path: str) -> MarketSet:
     """Real-trace loader: CSV columns = market_id,instance_type,region,zone,
-    memory_gb,on_demand_price,h0,h1,...  (one row per market)."""
+    memory_gb,on_demand_price[,device_count,interconnect_gbps],h0,h1,...
+    (one row per market). The topology columns are optional — legacy traces
+    without them load as single-device instances. Detection is header-driven:
+    a headerless file is always parsed as the legacy 6-meta-column format,
+    so traces that carry the topology columns MUST include the header row."""
     markets: List[Market] = []
     rows: List[List[float]] = []
+    n_meta = 6
     with open(path) as f:
         for rec in csv.reader(f):
             if rec[0] == "market_id":
+                if "device_count" in rec:
+                    n_meta = rec.index("h0") if "h0" in rec else 8
                 continue
+            kw = {}
+            if n_meta >= 8:
+                kw = dict(
+                    device_count=int(rec[6]),
+                    interconnect_gbps=float(rec[7]),
+                )
             markets.append(
                 Market(
                     market_id=int(rec[0]),
@@ -221,7 +282,8 @@ def load_csv_traces(path: str) -> MarketSet:
                     zone=rec[3],
                     memory_gb=int(rec[4]),
                     on_demand_price=float(rec[5]),
+                    **kw,
                 )
             )
-            rows.append([float(x) for x in rec[6:]])
+            rows.append([float(x) for x in rec[n_meta:]])
     return MarketSet(markets=markets, prices=np.asarray(rows))

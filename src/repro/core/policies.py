@@ -45,6 +45,15 @@ class OverheadModel:
     def migration_hours(self, mem_gb: float) -> float:
         return mem_gb / self.migration_bandwidth_gb_per_s / 3600.0
 
+    def reshard_hours(self, bytes_moved: float, interconnect_gbps: float) -> float:
+        """Live cross-mesh reshard: bytes actually moved (leaf-by-leaf, see
+        ``repro.dist.meshplan.reshard_bytes``) over the destination
+        market's device interconnect — orders of magnitude faster than the
+        remote-storage path ``restore_hours`` models."""
+        if bytes_moved <= 0:
+            return 0.0
+        return bytes_moved / (max(interconnect_gbps, 1e-9) * 1e9) / 3600.0
+
 
 @dataclasses.dataclass(frozen=True)
 class Job:

@@ -8,7 +8,12 @@ selects the whole failover chain UP FRONT by a mean-variance-style greedy
 objective that trades expected lifetime against price and against
 co-revocation with markets already in the portfolio:
 
-    score(m | P) = log(MTTR_m) · (1 − max_{p∈P} corr(m, p)) / price_m^γ
+    pick  argmax_m ( div(m|P),  log(MTTR_m) · div(m|P) / price_m^γ )   (lexicographic)
+    div(m|P) = 1 − max_{p∈P} corr(m, p)
+
+Diversity is the primary key because the heterogeneous instance menu
+spans a ~4× absolute-price band: a scalar price-weighted score would let
+a cheap-but-correlated shape outrank an uncorrelated one.
 
 Execution semantics are identical to Algorithm 1 (no FT mechanism; restart
 from scratch on revocation) — only the provisioning ORDER differs, so the
@@ -51,14 +56,20 @@ def select_portfolio(
     chain: List[int] = []
     rest = set(admitted)
     while rest and len(chain) < policy.size:
-        def score(m: int) -> float:
-            div = 1.0
-            if chain:
-                div = 1.0 - max(float(feats.corr[m, p]) for p in chain)
-            price = max(float(feats.avg_price[m]), 1e-9)
-            return math.log(max(lifetimes[m], 1.001)) * max(div, 0.0) / price**policy.price_gamma
+        def div(m: int) -> float:
+            if not chain:
+                return 1.0
+            return 1.0 - max(float(feats.corr[m, p]) for p in chain)
 
-        best = max(sorted(rest), key=score)
+        def score(m: int) -> float:
+            price = max(float(feats.avg_price[m]), 1e-9)
+            return math.log(max(lifetimes[m], 1.001)) * max(div(m), 0.0) / price**policy.price_gamma
+
+        # diversity first, lexicographically: the heterogeneous menu spans a
+        # ~4x absolute-price band, so a price-weighted scalar score would let
+        # a cheap-but-correlated shape outrank an uncorrelated one; price and
+        # lifetime only arbitrate among equally-diversified candidates.
+        best = max(sorted(rest), key=lambda m: (div(m), score(m)))
         chain.append(best)
         rest.discard(best)
     return chain

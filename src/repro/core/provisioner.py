@@ -18,6 +18,18 @@ DESIGN.md §Deviations):
   over all suitable markets (best effort) instead of failing the job;
 * the correlation filter empties S_j → we refill with the remaining
   suitable markets (minus already-revoked ones), again MTTR-descending.
+
+Instance-menu deviation (beyond the paper): the paper matches a job to the
+single smallest memory size that fits; our markets are *mesh shapes*
+(``device_count`` accelerators × ``memory_gb`` each, see
+``repro.core.market.InstanceShape``), so :func:`find_suitable_servers`
+matches the job's sharded state footprint against the instance's TOTAL
+memory (``memory_gb × device_count``) and keeps every shape within a
+bounded overshoot (default 4×) of the tightest fit. The suitable set
+therefore spans heterogeneous mesh shapes (Voorsluys & Buyya; Qu et al.)
+and Algorithm 1's MTTR ordering — with the historical-price tie-break —
+chooses among them; a revocation can re-provision onto a *different*
+shape, which the orchestrator handles as a live cross-mesh reshard.
 """
 from __future__ import annotations
 
@@ -36,9 +48,23 @@ class MarketFeatures:
 
     mttr: np.ndarray          # (n_markets,) hours
     corr: np.ndarray          # (n_markets, n_markets) co-revocation in [0,1]
-    memory_gb: np.ndarray     # (n_markets,)
+    memory_gb: np.ndarray     # (n_markets,) GiB per device
     on_demand: np.ndarray     # (n_markets,)
     avg_price: np.ndarray     # (n_markets,) mean historical spot price
+    device_count: np.ndarray = None      # (n_markets,) devices per instance
+    interconnect_gbps: np.ndarray = None  # (n_markets,) GB/s reshard bandwidth
+
+    def __post_init__(self):
+        if self.device_count is None:
+            self.device_count = np.ones_like(self.memory_gb)
+        if self.interconnect_gbps is None:
+            self.interconnect_gbps = np.full_like(self.memory_gb, 10.0)
+
+    @property
+    def total_memory_gb(self) -> np.ndarray:
+        """The instance shape's aggregate memory: what the job's *sharded*
+        state footprint must fit into."""
+        return self.memory_gb * self.device_count
 
     @classmethod
     def from_history(cls, history: MarketSet) -> "MarketFeatures":
@@ -48,21 +74,40 @@ class MarketFeatures:
             memory_gb=np.array([m.memory_gb for m in history.markets], dtype=float),
             on_demand=np.array([m.on_demand_price for m in history.markets]),
             avg_price=history.prices.mean(axis=1),
+            device_count=np.array(
+                [m.device_count for m in history.markets], dtype=float
+            ),
+            interconnect_gbps=np.array(
+                [m.interconnect_gbps for m in history.markets], dtype=float
+            ),
         )
 
 
 # --- Alg. 1 steps -----------------------------------------------------------
 
-def find_suitable_servers(job: Job, feats: MarketFeatures) -> List[int]:
-    """Step 2: the paper matches jobs to instance TYPES by memory size; the
-    suitable set is every market of the smallest type that fits the job
-    (bigger types waste money and are not "suitable" in the paper's EC2
-    mapping)."""
-    fits = feats.memory_gb[feats.memory_gb >= job.memory_gb]
+def find_suitable_servers(
+    job: Job, feats: MarketFeatures, *, max_overshoot: float = 4.0
+) -> List[int]:
+    """Step 2, menu-aware: a market is suitable when the job's sharded state
+    footprint fits the instance shape's TOTAL memory
+    (``memory_gb × device_count``) and the shape is not wastefully large
+    (total ≤ ``max_overshoot`` × the tightest fitting total).
+
+    Deviation from the paper (which keeps only the single smallest memory
+    size): the bounded-overshoot band deliberately keeps *several mesh
+    shapes* in play so Algorithm 1 provisions across heterogeneous instance
+    types — the degree of freedom the related heterogeneous-spot work
+    exploits — while still excluding shapes that only waste money."""
+    total = feats.total_memory_gb
+    fits = total[total >= job.memory_gb]
     if fits.size == 0:
         return []
     best = fits.min()
-    return [i for i in range(len(feats.memory_gb)) if feats.memory_gb[i] == best]
+    return [
+        i
+        for i in range(len(total))
+        if total[i] >= job.memory_gb and total[i] <= max_overshoot * best
+    ]
 
 
 def compute_lifetime(feats: MarketFeatures, suitable: Sequence[int]) -> Dict[int, float]:

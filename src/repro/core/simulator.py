@@ -67,18 +67,29 @@ class Simulator:
 
     def _od_price(self, job: Job) -> float:
         """Cheapest on-demand instance that fits the job."""
-        fit = [m for m in self.future.markets if m.memory_gb >= job.memory_gb]
+        fit = [m for m in self.future.markets if m.total_memory_gb >= job.memory_gb]
         return min(m.on_demand_price for m in fit)
 
     def _select_ft_market(
-        self, job: Job, wall: float, exclude: Set[int], mode: str, salt: int
+        self,
+        job: Job,
+        wall: float,
+        exclude: Set[int],
+        mode: str,
+        salt: int,
+        within: Optional[Set[int]] = None,
     ) -> int:
         """FT-baseline market choice: "random" (paper: no market
-        intelligence) or "cheapest" (price-aware variant)."""
+        intelligence) or "cheapest" (price-aware variant). ``within``
+        restricts candidates to one instance-shape class (replication:
+        replicas must be interchangeable)."""
         hour = min(int(wall), self.future.n_hours - 1)
-        cands = [i for i in alg.find_suitable_servers(job, self.feats) if i not in exclude]
+        suitable = alg.find_suitable_servers(job, self.feats)
+        if within is not None:
+            suitable = [i for i in suitable if i in within] or suitable
+        cands = [i for i in suitable if i not in exclude]
         if not cands:
-            cands = alg.find_suitable_servers(job, self.feats)
+            cands = suitable
         if mode == "cheapest":
             return min(cands, key=lambda i: self.future.prices[i, hour])
         rng = np.random.default_rng(
@@ -351,8 +362,16 @@ class Simulator:
         restarts FROM SCRATCH on a fresh market (no state is carried — that
         is the point of replication). The job completes when the first
         replica finishes; every other replica-hour is ``re_execution``
-        overhead, which is how replication pays for its fault tolerance."""
+        overhead, which is how replication pays for its fault tolerance.
+
+        Replicas must be interchangeable (any survivor IS the job), so all
+        of them are placed within the tightest-fitting instance-shape
+        class — the heterogeneous menu is a siwoft/portfolio degree of
+        freedom, not a replication one."""
         bd = Breakdown()
+        totals = self.feats.total_memory_gb
+        best_total = totals[totals >= job.memory_gb].min()
+        shape_class = {i for i in range(len(totals)) if totals[i] == best_total}
         k = policy.degree
         kills = self._ft_revocation_points(job, n_rev, salt=3)  # wall offsets
         # replica r is killed at kills[i] for i ≡ r (mod k)
@@ -373,7 +392,10 @@ class Simulator:
                 t0, t1 = boundaries[s_i], boundaries[s_i + 1]
                 if t1 <= t0:
                     continue
-                m = self._select_ft_market(job, start_wall + t0, excl, policy.market_selection, salt=13)
+                m = self._select_ft_market(
+                    job, start_wall + t0, excl, policy.market_selection,
+                    salt=13, within=shape_class,
+                )
                 excl.add(m)
                 session = Session(m, start_wall + t0)
                 session.add("startup", self.ov.startup_hours)

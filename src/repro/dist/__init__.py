@@ -8,7 +8,11 @@ fallbacks (indivisible dim -> drop the axis; a mesh axis is used at most
 once per tensor; ``layers``/``groups`` scan dims are never sharded;
 size-1 dims replicate); :mod:`repro.dist.elastic` moves live state between
 meshes when the spot provisioner shrinks or grows the device pool, so a
-revocation costs a reshard — not a checkpoint restore.
+revocation costs a reshard — not a checkpoint restore; and
+:mod:`repro.dist.meshplan` prices that claim: it turns the market's
+instance menu into concrete meshes (``ElasticMeshManager``) and computes
+``reshard_bytes`` (slice-overlap bytes actually moved) against
+``tree_bytes`` (what a checkpoint restore would pull through storage).
 
 Resharding and resolution are pure functions of ``(specs, mesh, layout)``:
 the same call sites serve the (16, 16) production pod, the (2, 16, 16)
@@ -16,6 +20,15 @@ multi-pod mesh, the elastic subprocess meshes, and the single-CPU host
 mesh in tests.
 """
 from repro.dist.elastic import replicate, reshard_params, reshard_tree
+from repro.dist.meshplan import (
+    ElasticMeshManager,
+    MeshPlan,
+    live_shardings,
+    mesh_shape_for,
+    reshard_bytes,
+    train_state_bytes,
+    tree_bytes,
+)
 from repro.dist.sharding import (
     PARAM_RULES,
     batch_shardings,
@@ -27,8 +40,15 @@ from repro.dist.sharding import (
 )
 
 __all__ = [
+    "ElasticMeshManager",
+    "MeshPlan",
     "PARAM_RULES",
     "batch_shardings",
+    "live_shardings",
+    "mesh_shape_for",
+    "reshard_bytes",
+    "train_state_bytes",
+    "tree_bytes",
     "cache_shardings",
     "make_activation_constrainer",
     "opt_state_shardings",

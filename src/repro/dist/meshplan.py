@@ -1,0 +1,189 @@
+"""Mesh planning for market-menu elastic provisioning.
+
+The provisioner's instance menu (``repro.core.market.InstanceShape``)
+describes each market as ``device_count`` accelerators behind an
+interconnect; this module turns that description into something the
+training stack can run on and *price*:
+
+* :func:`mesh_shape_for` — deterministic (data, model) factorization of a
+  device count (model axis = largest power of two ≤ √n that divides n, so
+  1→(1,1), 2→(2,1), 4→(2,2), 8→(4,2)),
+* :class:`MeshPlan` / :class:`ElasticMeshManager` — build and cache one
+  concrete ``jax.sharding.Mesh`` per honored device count from the local
+  device pool (menu shapes larger than the pool are capped — the local
+  pool *simulates* the market's instance), and resolve the old-vs-new
+  sharding trees for a migration,
+* :func:`reshard_bytes` — the byte-level cost model of a live cross-mesh
+  reshard: for every leaf, every destination device pays only for the
+  slice elements it does not already hold under the source sharding
+  (exact slice-overlap arithmetic over ``devices_indices_map``). Identical
+  shardings therefore cost 0 bytes; any migration costs at most
+  :func:`tree_bytes` — the full state size a checkpoint restore would pull
+  through remote storage. That inequality, in bytes, is the paper's
+  "no-FT is cheaper" claim made quantitative.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def mesh_shape_for(n_devices: int) -> Tuple[int, int]:
+    """Deterministic (data, model) factorization of ``n_devices``."""
+    n = max(int(n_devices), 1)
+    # model axis: largest power of two m with m*m <= n and n % m == 0
+    m = 1
+    while (m * 2) * (m * 2) <= n and n % (m * 2) == 0:
+        m *= 2
+    return (n // m, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """One menu shape made concrete on the local device pool."""
+
+    requested_devices: int          # the menu's device_count
+    device_count: int               # honored (capped to the local pool)
+    mesh_shape: Tuple[int, int]     # (data, model)
+    axes: Tuple[str, str]
+    mesh: Any                       # jax.sharding.Mesh
+
+    @property
+    def key(self) -> Tuple[int, Tuple[int, int]]:
+        """Identity of the *execution* substrate (honored count + shape)."""
+        return (self.device_count, self.mesh_shape)
+
+
+class ElasticMeshManager:
+    """Builds and caches one mesh per honored device count.
+
+    The pool is the local accelerator set (tests/benches: host CPUs forced
+    via ``XLA_FLAGS``); a menu shape asking for more devices than the pool
+    holds is capped — two menu shapes that cap to the same count share one
+    mesh, so re-provisioning between them is a zero-byte reshard.
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None):
+        self.devices: List[Any] = list(devices if devices is not None else jax.devices())
+        self._plans: Dict[int, MeshPlan] = {}
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "ElasticMeshManager":
+        return cls(devices=list(np.asarray(mesh.devices).flatten()))
+
+    def plan_for(self, device_count: int) -> MeshPlan:
+        n = max(1, min(int(device_count), len(self.devices)))
+        plan = self._plans.get(n)
+        if plan is None:
+            shape = mesh_shape_for(n)
+            devs = np.asarray(self.devices[:n], dtype=object).reshape(shape)
+            mesh = jax.sharding.Mesh(devs, ("data", "model"))
+            plan = MeshPlan(
+                requested_devices=int(device_count),
+                device_count=n,
+                mesh_shape=shape,
+                axes=("data", "model"),
+                mesh=mesh,
+            )
+            self._plans[n] = plan
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Byte-level reshard cost
+# ---------------------------------------------------------------------------
+
+def _norm_index(idx: Tuple, shape: Tuple[int, ...]) -> Tuple[Tuple[int, int], ...]:
+    """Normalize a devices_indices_map entry to ((start, stop), ...) pairs."""
+    out = []
+    for sl, dim in zip(idx, shape):
+        start, stop, step = sl.indices(dim)
+        assert step == 1, "strided shards unsupported"
+        out.append((start, stop))
+    return tuple(out)
+
+
+def _volume(norm: Tuple[Tuple[int, int], ...]) -> int:
+    v = 1
+    for start, stop in norm:
+        v *= max(stop - start, 0)
+    return v
+
+
+def _overlap(a, b) -> int:
+    v = 1
+    for (a0, a1), (b0, b1) in zip(a, b):
+        v *= max(min(a1, b1) - max(a0, b0), 0)
+    return v
+
+
+def _leaf_moved_bytes(leaf, old_sharding, new_sharding) -> int:
+    """Bytes a migration must move for one leaf: every destination device
+    pays for the part of its new slice it does not already hold locally."""
+    shape = tuple(leaf.shape)
+    itemsize = np.dtype(leaf.dtype).itemsize
+    if old_sharding == new_sharding:
+        return 0
+    old_map = {
+        d: _norm_index(idx, shape)
+        for d, idx in old_sharding.devices_indices_map(shape).items()
+    }
+    new_map = new_sharding.devices_indices_map(shape)
+    moved = 0
+    for dev, idx in new_map.items():
+        need = _norm_index(idx, shape)
+        have = old_map.get(dev)
+        vol = _volume(need)
+        if have is not None:
+            vol -= _overlap(need, have)
+        moved += max(vol, 0) * itemsize
+    return moved
+
+
+def reshard_bytes(tree: Any, old_shardings: Any, new_shardings: Any) -> int:
+    """Bytes actually moved by resharding ``tree`` from ``old_shardings``
+    to ``new_shardings`` — leaf-by-leaf slice-overlap accounting.
+
+    Leaves of ``tree`` only need ``.shape``/``.dtype`` (live arrays,
+    ShapeDtypeStructs, or ParamSpecs via ``abstract_params`` all work), so
+    the cost is computable *before* committing to a migration. Compare with
+    :func:`tree_bytes` — what a checkpoint restore moves through storage.
+    """
+    total = 0
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    old_leaves = jax.tree_util.tree_leaves(old_shardings)
+    new_leaves = jax.tree_util.tree_leaves(new_shardings)
+    assert len(leaves) == len(old_leaves) == len(new_leaves)
+    for leaf, old, new in zip(leaves, old_leaves, new_leaves):
+        total += _leaf_moved_bytes(leaf, old, new)
+    return int(total)
+
+
+def live_shardings(tree: Any) -> Any:
+    """The shardings a live pytree is currently laid out with."""
+    return jax.tree_util.tree_map(lambda x: x.sharding, tree)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Full byte size of a pytree — what a checkpoint restore transfers."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return int(total)
+
+
+def train_state_bytes(model) -> int:
+    """Param + Adam moment footprint of a model's TrainState, in bytes.
+
+    ``3 ×`` the param bytes: the fp32 master params plus the two Adam
+    moments (m, v) mirror the param tree; scalars are negligible. This is
+    the number the orchestrator matches against an instance shape's
+    ``memory_gb × device_count`` — replacing the seed's hard-coded 16 GB.
+    """
+    from repro.models.common import param_bytes
+
+    return 3 * param_bytes(model.specs)

@@ -1,7 +1,15 @@
-"""Serving launcher: batched prefill + greedy decode on the host mesh.
+"""Serving launcher: batched prefill + greedy decode on the host mesh,
+with the same sharded step construction train/dryrun use.
+
+Params, KV cache, and input batch all get NamedShardings resolved from the
+layout's rule tables (``param_shardings`` / ``cache_shardings`` /
+``batch_shardings``), the activation constrainer is threaded through the
+steps, and the decode cache is donated — on a 1-device host mesh this
+degenerates to the unsharded path, on a multi-device pool it serves
+sharded with zero code change.
 
     python -m repro.launch.serve --arch <id> [--batch 4] [--prompt-len 64]
-        [--new-tokens 16] [--int8-cache]
+        [--new-tokens 16] [--int8-cache] [--model-parallel 1]
 """
 import argparse
 import time
@@ -10,8 +18,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ShardingLayout, get_arch, list_archs
+from repro.dist import (
+    batch_shardings,
+    cache_shardings,
+    make_activation_constrainer,
+    param_shardings,
+)
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
-from repro.train.steps import run_opts_from_layout
+from repro.train.steps import build_decode_step, build_prefill_step
 
 
 def main() -> None:
@@ -21,13 +36,17 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--int8-cache", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
-    params = model.init(jax.random.key(0))
     layout = ShardingLayout(int8_kv_cache=args.int8_cache)
-    opts = run_opts_from_layout(layout)
+    mesh = make_host_mesh(model_parallel=args.model_parallel)
+    constrain = make_activation_constrainer(mesh, layout, cfg)
+
+    p_sh = param_shardings(model.specs, mesh, layout)
+    params = jax.device_put(model.init(jax.random.key(0)), p_sh)
 
     B, S = args.batch, args.prompt_len
     batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size, jnp.int32)}
@@ -37,20 +56,42 @@ def main() -> None:
         batch["patches"] = jax.random.normal(jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16)
 
     total = S + args.new_tokens
-    t0 = time.perf_counter()
-    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, total, opts))(params, batch)
-    jax.block_until_ready(logits)
-    print(f"prefill {S} tokens x{B}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+    in_sh = batch_shardings(batch, mesh)
+    c_specs = model.cache_specs(B, total, int8=args.int8_cache)
+    c_sh = cache_shardings(c_specs, mesh, layout)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
 
-    decode = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos, opts))
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t0 = time.perf_counter()
-    toks = [tok]
-    for i in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, tok, jnp.int32(S + i))
+    prefill = jax.jit(
+        build_prefill_step(model, layout, total, constrain),
+        in_shardings=(p_sh, in_sh),
+        # commit the produced cache to the same shardings decode declares,
+        # or the decode jit rejects the GSPMD-chosen layout on >1 device
+        out_shardings=(None, c_sh),
+    )
+    decode = jax.jit(
+        build_decode_step(model, layout, constrain),
+        in_shardings=(p_sh, c_sh, in_sh["tokens"], repl),
+        # the returned cache feeds the next decode call: pin it to the same
+        # shardings or GSPMD drifts the layout and the next call rejects it
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+
+    with mesh:
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, batch)
+        jax.block_until_ready(logits)
+        print(f"prefill {S} tokens x{B}: {(time.perf_counter()-t0)*1e3:.0f} ms "
+              f"(mesh {dict(mesh.shape)})")
+
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        toks.append(tok)
-    jax.block_until_ready(tok)
+        t0 = time.perf_counter()
+        toks = [tok]
+        for i in range(args.new_tokens - 1):
+            logits, cache = decode(params, cache, tok, jnp.int32(S + i))
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            toks.append(tok)
+        jax.block_until_ready(tok)
     dt = (time.perf_counter() - t0) / max(args.new_tokens - 1, 1)
     print(f"decode: {dt*1e3:.1f} ms/token (int8_cache={args.int8_cache})")
     print("first row:", jnp.concatenate(toks, axis=1)[0].tolist())

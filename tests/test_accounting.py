@@ -51,14 +51,18 @@ def test_splitting_sessions_never_cheaper(d1, d2, price):
 
 
 def test_csv_roundtrip(tmp_path):
+    """Topology-aware trace format: device_count/interconnect columns ride
+    along and survive the roundtrip."""
     ms = generate_markets(seed=0, n_hours=48)
     rows = ["market_id,instance_type,region,zone,memory_gb,on_demand_price,"
+            "device_count,interconnect_gbps,"
             + ",".join(f"h{i}" for i in range(48))]
     for m in ms.markets[:10]:
         prices = ",".join(f"{p:.6f}" for p in ms.prices[m.market_id])
         rows.append(
             f"{m.market_id},{m.instance_type},{m.region},{m.zone},"
-            f"{m.memory_gb},{m.on_demand_price},{prices}"
+            f"{m.memory_gb},{m.on_demand_price},"
+            f"{m.device_count},{m.interconnect_gbps},{prices}"
         )
     p = tmp_path / "traces.csv"
     p.write_text("\n".join(rows))
@@ -66,3 +70,37 @@ def test_csv_roundtrip(tmp_path):
     assert len(loaded.markets) == 10
     np.testing.assert_allclose(loaded.prices, ms.prices[:10], atol=1e-6)
     np.testing.assert_allclose(loaded.mttr_hours(), ms.mttr_hours()[:10])
+    for got, want in zip(loaded.markets, ms.markets[:10]):
+        assert got.device_count == want.device_count
+        assert got.interconnect_gbps == want.interconnect_gbps
+        assert got.total_memory_gb == want.total_memory_gb
+
+
+def test_legacy_csv_without_topology_columns(tmp_path):
+    """Pre-menu traces (6 meta columns) still load, as 1-device markets."""
+    rows = ["market_id,instance_type,region,zone,memory_gb,on_demand_price,h0,h1",
+            "0,m5.xlarge,us-east-1,us-east-1a,16,0.192,0.05,0.06"]
+    p = tmp_path / "legacy.csv"
+    p.write_text("\n".join(rows))
+    loaded = load_csv_traces(str(p))
+    assert loaded.markets[0].device_count == 1
+    assert loaded.prices.shape == (1, 2)
+
+
+def test_reshard_component_sums_into_totals():
+    """The new ``reshard`` component is a first-class billing citizen: it
+    lands in Breakdown.time/cost and sums into total_time/total_cost."""
+    from repro.core.accounting import COST_COMPONENTS, TIME_COMPONENTS
+
+    assert "reshard" in TIME_COMPONENTS and "reshard" in COST_COMPONENTS
+    s = Session(market_id=0, start_wall=0.0)
+    s.add("execution", 0.5)
+    s.add("reshard", 0.25)
+    bd = Breakdown()
+    bill_session(s, lambda m, h: 2.0, bd)
+    assert bd.time["reshard"] == pytest.approx(0.25)
+    assert bd.cost["reshard"] == pytest.approx(0.5)
+    assert bd.total_time == pytest.approx(0.75)
+    # 0.75 h used -> 1 whole billed hour at $2/h
+    assert bd.total_cost == pytest.approx(2.0)
+    assert bd.cost["billing_buffer"] == pytest.approx(0.5)

@@ -83,16 +83,30 @@ def test_revocation_probability_monotone_in_length(l1, l2, mttr):
 
 @given(mem=st.floats(1, 192))
 @settings(max_examples=30, deadline=None)
-def test_suitable_servers_fit_and_are_smallest_type(mem, feats):
+def test_suitable_servers_fit_with_bounded_overshoot(mem, feats):
+    """Menu-aware step 2: every suitable shape's TOTAL memory
+    (memory_gb × device_count) fits the job, the tightest fitting shape is
+    included, and nothing more than 4× the tightest fit survives."""
     job = Job(length_hours=10, memory_gb=mem)
     suitable = alg.find_suitable_servers(job, feats)
-    assert suitable, "menu covers up to 192 GB"
-    sizes = {feats.memory_gb[i] for i in suitable}
-    assert len(sizes) == 1
-    size = sizes.pop()
-    assert size >= mem
-    smaller = feats.memory_gb[(feats.memory_gb >= mem) & (feats.memory_gb < size)]
-    assert smaller.size == 0  # smallest fitting type
+    assert suitable, "menu covers up to 320 GB totals"
+    totals = feats.total_memory_gb
+    fitting = totals[totals >= mem]
+    best = fitting.min()
+    for i in suitable:
+        assert totals[i] >= mem
+        assert totals[i] <= 4.0 * best
+    assert any(totals[i] == best for i in suitable)  # tightest fit kept
+
+
+def test_suitable_servers_span_mesh_shapes(feats):
+    """The point of the instance menu: for a small job the suitable set
+    must contain MULTIPLE device counts, so a revocation can re-provision
+    onto a different mesh shape (live reshard, not a same-shape restart)."""
+    job = Job(length_hours=10, memory_gb=0.05)
+    suitable = alg.find_suitable_servers(job, feats)
+    shapes = {int(feats.device_count[i]) for i in suitable}
+    assert len(shapes) >= 2, shapes
 
 
 @given(length=st.floats(0.5, 200))

@@ -1,0 +1,174 @@
+"""Mesh planning + byte-level reshard cost model + the orchestrator's live
+cross-mesh migration path.
+
+In-process tests cover the pure pieces (shape factorization, pool capping,
+zero-byte identity reshards, footprint derivation). The multi-device
+behavior — grow→shrink→grow bit-exactness, moved-bytes bounds, and the
+orchestrator re-jitting onto a different mesh shape after a siwoft
+revocation — runs in a subprocess with 8 forced host devices (the main
+test process is pinned to 1 CPU)."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import (
+    ElasticMeshManager,
+    live_shardings,
+    mesh_shape_for,
+    reshard_bytes,
+    train_state_bytes,
+    tree_bytes,
+)
+
+
+def test_mesh_shape_factorization():
+    assert mesh_shape_for(1) == (1, 1)
+    assert mesh_shape_for(2) == (2, 1)
+    assert mesh_shape_for(4) == (2, 2)
+    assert mesh_shape_for(8) == (4, 2)
+    assert mesh_shape_for(256) == (16, 16)
+    for n in range(1, 20):
+        d, m = mesh_shape_for(n)
+        assert d * m == n
+
+
+def test_manager_caps_to_pool_and_caches():
+    man = ElasticMeshManager()  # 1 CPU in the main test process
+    p8 = man.plan_for(8)
+    p4 = man.plan_for(4)
+    assert p8.device_count == len(jax.devices())
+    assert p8.requested_devices == 8
+    # capped shapes collapse onto one cached mesh -> zero-byte migrations
+    assert p8.key == p4.key
+    assert p8.mesh is p4.mesh
+
+
+def test_reshard_bytes_zero_for_identical_shardings(host_mesh):
+    tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.zeros((), jnp.int32)}
+    sh = live_shardings(tree)
+    assert reshard_bytes(tree, sh, sh) == 0
+    assert tree_bytes(tree) == 64 * 4 + 4
+
+
+def test_train_state_footprint_replaces_hardcoded_16gb():
+    from repro.config import get_arch
+    from repro.models import build_model
+    from repro.models.common import param_bytes
+
+    model = build_model(get_arch("qwen3-4b").reduced())
+    b = train_state_bytes(model)
+    assert b == 3 * param_bytes(model.specs)
+    gb = b / 2**30
+    assert 0 < gb < 1.0  # reduced model: far from the seed's 16.0 GB
+
+
+MULTI_DEVICE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import ShardingLayout, TrainConfig, get_arch
+    from repro.dist import (
+        ElasticMeshManager, live_shardings, param_shardings,
+        reshard_bytes, reshard_tree, tree_bytes,
+    )
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+
+    cfg = get_arch("qwen3-4b").reduced()
+    model = build_model(cfg)
+    layout = ShardingLayout()
+
+    man = ElasticMeshManager()
+    plan4, plan8, plan2 = man.plan_for(4), man.plan_for(8), man.plan_for(2)
+    assert plan8.mesh_shape == (4, 2) and plan4.mesh_shape == (2, 2)
+
+    # ---- grow -> shrink -> grow roundtrip is bit-exact ------------------
+    params0 = model.init(jax.random.key(0))
+    ref = jax.tree_util.tree_map(np.asarray, params0)
+    sh4 = param_shardings(model.specs, plan4.mesh, layout)
+    sh8 = param_shardings(model.specs, plan8.mesh, layout)
+    sh2 = param_shardings(model.specs, plan2.mesh, layout)
+    p = reshard_tree(params0, sh4)       # place on 4
+    p = reshard_tree(p, sh8)             # grow to 8
+    p = reshard_tree(p, sh2)             # shrink to 2
+    p = reshard_tree(p, sh8)             # grow again
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), b), p, ref
+    )
+    print("ROUNDTRIP_BITEXACT_OK")
+
+    # ---- moved bytes: 0 for identical, bounded by full size ------------
+    p4 = reshard_tree(params0, sh4)
+    assert reshard_bytes(p4, live_shardings(p4), sh4) == 0
+    full = tree_bytes(p4)
+    moved = reshard_bytes(p4, sh4, sh8)
+    assert 0 < moved <= full, (moved, full)
+    print("RESHARD_BYTES_OK", moved, full)
+
+    # ---- orchestrator: siwoft revocation -> live reshard + re-jit ------
+    from repro.core.market import Market, MarketSet
+    from repro.core.orchestrator import SpotTrainingOrchestrator
+    from repro.data import SyntheticLM
+
+    markets = [
+        Market(0, "p8", "r1", "r1a", 2, 1.0, device_count=8, interconnect_gbps=50.0),
+        Market(1, "g4", "r1", "r1b", 4, 1.0, device_count=4, interconnect_gbps=25.0),
+        Market(2, "c1", "r2", "r2a", 16, 1.0, device_count=1, interconnect_gbps=10.0),
+    ]
+    H = 60
+    hp = np.full((3, H), 0.3)
+    hp[1, ::30] = 1.5   # m1: MTTR 30 h
+    hp[2, ::6] = 1.5    # m2: MTTR 6 h  (m0 never revokes in history)
+    hist = MarketSet(markets, hp)
+    F = 12
+    fp = np.full((3, F), 0.3)
+    fp[0, 1:] = 1.5     # m0 revokes from future hour 1
+    fut = MarketSet(markets, fp, start_hour=H)
+
+    ds = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
+    tc = TrainConfig(total_steps=40, warmup_steps=2)
+    orch = SpotTrainingOrchestrator(
+        model, ds, make_mesh((4, 2), ("data", "model")), hist, fut,
+        mode="siwoft", tc=tc, segment_steps=10, steps_per_trace_hour=5, seed=0,
+    )
+    rep = orch.run(20)
+    assert rep.useful_steps == 20 and rep.revocations == 1, (
+        rep.useful_steps, rep.revocations)
+    assert rep.mesh_shapes[0] == (4, 2), rep.mesh_shapes
+    assert (2, 2) in rep.mesh_shapes[1:], rep.mesh_shapes
+    assert len(set(rep.mesh_shapes)) >= 2
+    assert len(orch._steps) >= 2          # re-jitted for the new mesh
+    assert rep.reshard_bytes > 0 and rep.reshard_events == 1
+    assert rep.breakdown.time["reshard"] > 0
+    assert rep.breakdown.cost["reshard"] > 0
+    assert rep.reshard_bytes <= tree_bytes(params0) * 3 + 64
+    assert all(np.isfinite(rep.losses))
+    print("ORCH_RESHARD_OK", rep.reshard_bytes, rep.mesh_shapes)
+    """
+)
+
+
+def test_meshplan_multi_device_subprocess():
+    # inherit the parent env (JAX_PLATFORMS etc. — a bare env makes the PJRT
+    # plugin probe for TPU metadata and hang); only PYTHONPATH is forced
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    res = subprocess.run(
+        [sys.executable, "-c", MULTI_DEVICE_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env={**os.environ, "PYTHONPATH": str(repo / "src")},
+        cwd=str(repo),
+    )
+    out = res.stdout + res.stderr
+    assert "ROUNDTRIP_BITEXACT_OK" in res.stdout, out
+    assert "RESHARD_BYTES_OK" in res.stdout, out
+    assert "ORCH_RESHARD_OK" in res.stdout, out
