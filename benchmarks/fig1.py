@@ -3,6 +3,12 @@
 and on-demand (O), swept over job length / memory footprint / revocation
 count — stacked into the paper's overhead components.
 
+Runs on the LEGACY single-device menu (``legacy_menu()``): the paper
+models instances as memory sizes only, so every shape has throughput 1.0
+and the C1/C2 orderings are evaluated in the paper's own homogeneous
+setting. The heterogeneous price-vs-speed menu is exercised by
+``benchmarks/orchestrator_bench.py``.
+
 Usage:
     python -m benchmarks.fig1 [--axis length|memory|revocations|all]
                               [--seeds 5] [--ratio-sweep]
@@ -25,6 +31,7 @@ from repro.core import (
     Simulator,
     SiwoftPolicy,
     generate_markets,
+    legacy_menu,
     split_history_future,
 )
 from repro.core.accounting import COST_COMPONENTS, TIME_COMPONENTS
@@ -38,6 +45,7 @@ REV_PER_DAY = 4                          # FT injected revocations per day
 
 def make_sims(n_seeds: int, **market_kw):
     sims = []
+    market_kw.setdefault("menu", legacy_menu())
     for seed in range(n_seeds):
         ms = generate_markets(seed=seed, n_hours=24 * 90 + 24 * 60, **market_kw)
         hist, fut = split_history_future(ms, 24 * 90)
@@ -111,7 +119,10 @@ def portfolio_sweep(n_seeds: int, out: List[str]):
     job = Job(48, 16)
     cs, cp, rs, rp = [], [], [], []
     for seed in range(n_seeds * 2):
-        ms = generate_markets(seed=100 + seed, n_hours=24 * 150, rare_market_fraction=0.0)
+        ms = generate_markets(
+            seed=100 + seed, n_hours=24 * 150, rare_market_fraction=0.0,
+            menu=legacy_menu(),
+        )
         hist, fut = split_history_future(ms, 24 * 90)
         sim = Simulator(hist, fut, seed=seed)
         a = sim.run_job(job, SiwoftPolicy())
@@ -131,7 +142,7 @@ def ratio_sweep(n_seeds: int, out: List[str]):
     for lo, hi in [(0.1, 0.3), (0.3, 0.5), (0.55, 0.8), (0.8, 0.95)]:
         sims = []
         for seed in range(n_seeds):
-            ms = generate_markets(seed=100 + seed, n_hours=24 * 150)
+            ms = generate_markets(seed=100 + seed, n_hours=24 * 150, menu=legacy_menu())
             # rescale the non-spike base ratio into [lo, hi]
             od = np.array([m.on_demand_price for m in ms.markets])[:, None]
             ratio = ms.prices / od

@@ -14,8 +14,10 @@ from repro.core.market import (
     Market,
     MarketSet,
     generate_markets,
+    legacy_menu,
     load_csv_traces,
     revocation_probability,
+    shape_throughput,
     split_history_future,
 )
 from repro.core.policies import (
@@ -28,15 +30,21 @@ from repro.core.policies import (
     SiwoftPolicy,
 )
 from repro.core.portfolio import PortfolioPolicy
-from repro.core.provisioner import MarketFeatures
+from repro.core.provisioner import (
+    MarketFeatures,
+    cost_to_complete,
+    expected_cost_to_complete,
+)
 from repro.core.simulator import Simulator
 from repro.core.accounting import Breakdown
 
 __all__ = [
     "INSTANCE_MENU", "InstanceShape",
-    "Market", "MarketSet", "generate_markets", "load_csv_traces",
-    "revocation_probability", "split_history_future",
+    "Market", "MarketSet", "generate_markets", "legacy_menu",
+    "load_csv_traces", "revocation_probability", "shape_throughput",
+    "split_history_future",
     "CheckpointPolicy", "Job", "MigrationPolicy", "OnDemandPolicy",
     "OverheadModel", "ReplicationPolicy", "SiwoftPolicy",
     "MarketFeatures", "PortfolioPolicy", "Simulator", "Breakdown",
+    "cost_to_complete", "expected_cost_to_complete",
 ]

@@ -28,6 +28,60 @@ import numpy as np
 
 HOURS_3_MONTHS = 24 * 90  # one billing cycle per hour, 3-month feature window
 
+# ---------------------------------------------------------------------------
+# Per-shape throughput model
+# ---------------------------------------------------------------------------
+# A shape's delivered training speed, in units where the 1-device reference
+# shape ≡ 1.0 work-hour per wall-hour. Scaling across devices is sublinear
+# (collectives, stragglers): ``n`` devices deliver ``n^α`` speedup with
+# α < 1, and the interconnect sets WHERE α lands between the floor and the
+# ceiling — a faster fabric loses less of each step to collectives, so it
+# scales closer to linear, but never reaches it. Because the bandwidth
+# enters through the exponent, a 1-device shape (n^α = 1 for any α) is
+# interconnect-invariant and exactly 1.0 — which is what keeps legacy
+# single-device traces bit-identical to the pre-throughput simulator —
+# and doubling devices multiplies throughput by 2^α < 2 at EVERY
+# bandwidth, so the model cannot be gamed into superlinear scaling.
+THROUGHPUT_EFFICIENCY_FLOOR = 0.6     # scaling exponent as bandwidth -> 0
+THROUGHPUT_EFFICIENCY_CEIL = 0.95     # < 1: sublinear even on infinite fabric
+REFERENCE_INTERCONNECT_GBPS = 10.0    # bandwidth at the floor/ceil midpoint
+
+
+def shape_throughput(
+    device_count: int,
+    interconnect_gbps: float = REFERENCE_INTERCONNECT_GBPS,
+    *,
+    efficiency_floor: float = THROUGHPUT_EFFICIENCY_FLOOR,
+    efficiency_ceil: float = THROUGHPUT_EFFICIENCY_CEIL,
+) -> float:
+    """Relative steps/hour of a mesh shape vs the 1-device reference.
+
+    ``throughput(1, anything) == 1.0`` exactly; strictly increasing and
+    sublinear in ``device_count`` (2× devices < 2× speed at any
+    bandwidth); non-decreasing in ``interconnect_gbps`` for n > 1.
+    The scaling exponent saturates from the floor toward the ceiling as
+    ``bw / (bw + 10 GB/s)``: α(10) ≈ 0.78, α(25) = 0.85, α(60) = 0.9.
+    """
+    n = max(int(device_count), 1)
+    if n == 1:
+        return 1.0
+    bw = max(float(interconnect_gbps), 0.0)
+    alpha = efficiency_ceil - (efficiency_ceil - efficiency_floor) * (
+        REFERENCE_INTERCONNECT_GBPS / (REFERENCE_INTERCONNECT_GBPS + bw)
+    )
+    return float(n) ** alpha
+
+
+def resolved_throughput(
+    steps_per_hour: Optional[float], device_count: int, interconnect_gbps: float
+) -> float:
+    """A shape's relative steps/hour: the measured ``steps_per_hour``
+    override when present, else the analytic model — the single resolution
+    rule shared by :class:`InstanceShape` and :class:`Market`."""
+    if steps_per_hour is not None:
+        return float(steps_per_hour)
+    return shape_throughput(device_count, interconnect_gbps)
+
 
 @dataclasses.dataclass(frozen=True)
 class InstanceShape:
@@ -37,6 +91,8 @@ class InstanceShape:
     state fits ``memory_gb × device_count``. ``interconnect_gbps`` is the
     device-to-device bandwidth (GB/s) a live reshard moves bytes over —
     the denominator of the ``reshard`` time/cost component.
+    ``steps_per_hour``, when set, overrides the analytic throughput model
+    with a measured rate (relative to the 1-device reference shape).
     """
 
     instance_type: str
@@ -44,10 +100,18 @@ class InstanceShape:
     on_demand_price: float       # $/h for the whole instance
     device_count: int = 1        # accelerators per instance
     interconnect_gbps: float = 10.0  # GB/s device interconnect
+    steps_per_hour: Optional[float] = None  # measured relative throughput
 
     @property
     def total_memory_gb(self) -> float:
         return float(self.memory_gb * self.device_count)
+
+    @property
+    def throughput(self) -> float:
+        """Relative steps/hour: measured override, else the analytic model."""
+        return resolved_throughput(
+            self.steps_per_hour, self.device_count, self.interconnect_gbps
+        )
 
 
 # EC2-ish accelerator menu. Deviation from the paper (which models CPU
@@ -55,15 +119,40 @@ class InstanceShape:
 # count and interconnect bandwidth — so heterogeneous-type provisioning
 # (Voorsluys & Buyya; Qu et al.) has a real degree of freedom. Several
 # entries share a total-memory class at different device counts so the
-# suitable set spans *different mesh shapes* for the same job.
+# suitable set spans *different mesh shapes* for the same job. Pricing is
+# deliberately heterogeneous in $/throughput, the quantity the related
+# heterogeneous-spot work shows varies wildly across types: the small
+# accelerator box (g5.2xlarge) carries a per-device premium, while the big
+# boxes get volume-style pricing that undercuts the 1-device reference per
+# unit of WORK despite a much higher sticker $/h — price vs speed is a
+# real trade, not a monotone ladder.
 INSTANCE_MENU: Tuple[InstanceShape, ...] = (
     InstanceShape("m5.xlarge", 16, 0.192, device_count=1, interconnect_gbps=10.0),
     InstanceShape("m5.2xlarge", 32, 0.384, device_count=1, interconnect_gbps=10.0),
     InstanceShape("g5.2xlarge", 16, 0.402, device_count=2, interconnect_gbps=25.0),
-    InstanceShape("g5.12xlarge", 16, 0.804, device_count=4, interconnect_gbps=25.0),
-    InstanceShape("p3.16xlarge", 16, 1.608, device_count=8, interconnect_gbps=50.0),
-    InstanceShape("p4d.24xlarge", 40, 2.472, device_count=8, interconnect_gbps=60.0),
+    InstanceShape("g5.12xlarge", 16, 0.550, device_count=4, interconnect_gbps=25.0),
+    InstanceShape("p3.16xlarge", 16, 1.100, device_count=8, interconnect_gbps=50.0),
+    InstanceShape("p4d.24xlarge", 40, 1.200, device_count=8, interconnect_gbps=60.0),
 )
+
+
+def legacy_menu(menu: Sequence[InstanceShape] = INSTANCE_MENU) -> Tuple[InstanceShape, ...]:
+    """The paper's memory-size-only menu: every shape collapsed to a single
+    device holding its total memory. All throughputs are exactly 1.0, so
+    provisioning trades price against MTTR only — the pre-throughput
+    physics. Paper-exact reproductions (``benchmarks/fig1.py``, the C1–C3
+    simulator tests) run on this; the heterogeneous default menu is the
+    beyond-paper setting where price also trades against speed."""
+    return tuple(
+        dataclasses.replace(
+            s,
+            memory_gb=int(s.total_memory_gb),
+            device_count=1,
+            interconnect_gbps=REFERENCE_INTERCONNECT_GBPS,
+            steps_per_hour=None,
+        )
+        for s in menu
+    )
 
 # 6 regions × 4 AZs = 24 markets per instance type. EC2 reality is ~75+;
 # what matters for the paper's premise is that P(no rare-revocation market
@@ -92,10 +181,18 @@ class Market:
     on_demand_price: float
     device_count: int = 1
     interconnect_gbps: float = 10.0
+    steps_per_hour: Optional[float] = None  # measured relative throughput
 
     @property
     def total_memory_gb(self) -> float:
         return float(self.memory_gb * self.device_count)
+
+    @property
+    def throughput(self) -> float:
+        """Relative steps/hour: measured override, else the analytic model."""
+        return resolved_throughput(
+            self.steps_per_hour, self.device_count, self.interconnect_gbps
+        )
 
 
 @dataclasses.dataclass
@@ -198,6 +295,7 @@ def generate_markets(
                         shape.on_demand_price,
                         device_count=shape.device_count,
                         interconnect_gbps=shape.interconnect_gbps,
+                        steps_per_hour=shape.steps_per_hour,
                     )
                 )
                 mid += 1
@@ -254,26 +352,40 @@ def split_history_future(ms: MarketSet, history_hours: int) -> Tuple[MarketSet, 
 
 def load_csv_traces(path: str) -> MarketSet:
     """Real-trace loader: CSV columns = market_id,instance_type,region,zone,
-    memory_gb,on_demand_price[,device_count,interconnect_gbps],h0,h1,...
-    (one row per market). The topology columns are optional — legacy traces
-    without them load as single-device instances. Detection is header-driven:
-    a headerless file is always parsed as the legacy 6-meta-column format,
-    so traces that carry the topology columns MUST include the header row."""
+    memory_gb,on_demand_price[,device_count,interconnect_gbps]
+    [,steps_per_hour],h0,h1,... (one row per market; full schema in
+    ``docs/trace-format.md``). The topology and throughput columns are
+    optional — legacy traces without them load as single-device instances
+    with unit throughput. Detection is header-driven: a headerless file is
+    always parsed as the legacy 6-meta-column format, so traces that carry
+    any optional column MUST include the header row. An empty
+    ``steps_per_hour`` cell means "no measurement" (analytic model used)."""
     markets: List[Market] = []
     rows: List[List[float]] = []
     n_meta = 6
+    col: Dict[str, int] = {}
     with open(path) as f:
         for rec in csv.reader(f):
             if rec[0] == "market_id":
-                if "device_count" in rec:
-                    n_meta = rec.index("h0") if "h0" in rec else 8
+                if "h0" in rec:
+                    n_meta = rec.index("h0")
+                elif any(
+                    c in rec
+                    for c in ("device_count", "interconnect_gbps", "steps_per_hour")
+                ):
+                    # price columns unlabeled: the header names exactly the
+                    # metadata block, so its length IS the block width (the
+                    # PR 2 topology traces shipped this way)
+                    n_meta = len(rec)
+                col = {name: i for i, name in enumerate(rec[:n_meta])}
                 continue
             kw = {}
-            if n_meta >= 8:
-                kw = dict(
-                    device_count=int(rec[6]),
-                    interconnect_gbps=float(rec[7]),
-                )
+            if "device_count" in col:
+                kw["device_count"] = int(rec[col["device_count"]])
+            if "interconnect_gbps" in col:
+                kw["interconnect_gbps"] = float(rec[col["interconnect_gbps"]])
+            if "steps_per_hour" in col and rec[col["steps_per_hour"]].strip():
+                kw["steps_per_hour"] = float(rec[col["steps_per_hour"]])
             markets.append(
                 Market(
                     market_id=int(rec[0]),

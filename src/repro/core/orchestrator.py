@@ -35,10 +35,25 @@ re-execution head-to-head. The checkpoint baseline instead pays
 reported as ``restore_bytes`` — the byte-level comparison the paper's
 thesis needs.
 
+Throughput deviation (beyond the paper): each market's shape carries a
+relative throughput (``repro.core.market.shape_throughput`` — sublinear in
+device count), so ``steps_per_trace_hour`` is the 1-device REFERENCE rate
+and a provisioned market delivers ``steps_per_trace_hour × θ`` steps per
+trace hour. Provisioning ranks by expected cost-to-complete (price
+integrated over the shape-dependent wall time) rather than raw $/h, so
+siwoft deliberately migrates to a bigger, pricier shape when it finishes
+the remaining work cheaper. The orchestrator also MEASURES real steps/sec
+per mesh shape from ``run_segment`` wall timings (``ThroughputTracker``)
+and corrects the analytic model with the observed ratios on every
+subsequent pick; the report carries the measured per-shape rates
+(``shape_steps_per_hour``) and the first pick's expected
+``cost_to_complete``.
+
 Revocations: siwoft/hybrid markets revoke when their future price trace
-crosses on-demand (mapped trace-hour → step index); the FT baseline gets
-the paper's fixed injected revocation count. Costs accrue per billing cycle
-against the market's trace price with measured wall time.
+crosses on-demand (mapped trace-hour → step index at the shape's step
+rate); the FT baseline gets the paper's fixed injected revocation count.
+Costs accrue per billing cycle against the market's trace price with an
+explicit monotone wall clock that advances at the shape-dependent rate.
 """
 from __future__ import annotations
 
@@ -54,13 +69,18 @@ from repro.ckpt import CheckpointManager
 from repro.config.base import ShardingLayout, TrainConfig
 from repro.core import provisioner as alg
 from repro.core.accounting import Breakdown, Session, bill_session
-from repro.core.market import MarketSet
+from repro.core.market import (
+    THROUGHPUT_EFFICIENCY_CEIL,
+    MarketSet,
+    shape_throughput,
+)
 from repro.core.policies import Job, OverheadModel, SiwoftPolicy
 from repro.data import SyntheticLM
 from repro.dist.elastic import reshard_tree
 from repro.dist.meshplan import (
     ElasticMeshManager,
     MeshPlan,
+    ThroughputTracker,
     live_shardings,
     reshard_bytes,
     train_state_bytes,
@@ -87,6 +107,13 @@ class OrchestratorReport:
     reshard_events: int = 0         # migrations that moved live state
     mesh_shapes: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     breakdown: Optional[Breakdown] = None
+    # throughput accounting (beyond the paper): measured steps/hour per mesh
+    # shape ("DxM" -> steps/hour, from run_segment wall timings) and the
+    # expected $ cost-to-complete of the first provisioned market — the
+    # quantity the provisioner ranked by (price/throughput over the work,
+    # risk-adjusted), as opposed to that market's raw $/h
+    shape_steps_per_hour: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cost_to_complete: float = 0.0
 
     @property
     def goodput(self) -> float:
@@ -141,9 +168,16 @@ class SpotTrainingOrchestrator:
         self.ckpt_every = ckpt_every
         # one jitted step + state-sharding tree per distinct mesh plan
         self._steps: Dict[Tuple, Tuple[Any, Any]] = {}
+        # measured steps/sec per mesh-plan key (EMA) + the analytic
+        # prediction for each honored shape — the correction of the menu's
+        # throughput model by what run_segment actually delivered
+        self.thr_tracker = ThroughputTracker()
+        self._analytic_honored: Dict[Tuple, float] = {}
 
     # ------------------------------------------------------------------
     def _segment_job(self, total_steps: int) -> Job:
+        # length in WORK hours: steps at the 1-device reference rate; a
+        # provisioned shape with throughput θ delivers θ × steps_per_hour
         hours = total_steps / self.steps_per_hour
         # real footprint: fp32 params + both Adam moments, from the model's
         # ParamSpec tree via the dist layer (was: hard-coded 16 GB)
@@ -160,35 +194,71 @@ class SpotTrainingOrchestrator:
             self._steps[plan.key] = entry
         return entry
 
-    def _pick_market_siwoft(self, job: Job, revoked: Set[int]) -> int:
+    def _plan_key_for(self, market: int) -> Tuple:
+        plan = self.meshman.plan_for(self.future.markets[market].device_count)
+        if plan.key not in self._analytic_honored:
+            self._analytic_honored[plan.key] = shape_throughput(plan.device_count)
+        return plan.key
+
+    def _effective_feats(self) -> alg.MarketFeatures:
+        """Menu features with the throughput column calibrated by measured
+        per-shape step rates: analytic model × measured-vs-analytic
+        correction for the market's (honored) mesh shape. Until two
+        distinct shapes have been timed the correction is 1.0 and the
+        analytic model stands."""
+        thr = np.array(self.feats.throughput, dtype=float, copy=True)
+        for i, m in enumerate(self.future.markets):
+            if m.steps_per_hour is not None:
+                # an explicit measured rate in the trace is ground truth:
+                # neither the local-pool correction nor the analytic
+                # ceiling applies to it
+                continue
+            key = self._plan_key_for(i)
+            thr[i] *= self.thr_tracker.correction(key, self._analytic_honored)
+            # the correction is anchored on the local pool's honored shapes
+            # (default-bandwidth exponent), while the analytic value it
+            # scales is bandwidth-aware — cap the product at the model's
+            # sublinear ceiling so no calibration can claim superlinear
+            # scaling
+            cap = float(self.feats.device_count[i]) ** THROUGHPUT_EFFICIENCY_CEIL
+            thr[i] = min(thr[i], cap)
+        return dataclasses.replace(self.feats, throughput=thr)
+
+    def _throughput_of(self, feats: alg.MarketFeatures, market: int) -> float:
+        return max(float(feats.throughput[market]), 1e-9)
+
+    def _pick_market_siwoft(self, job: Job, feats, revoked: Set[int]) -> int:
         suitable = [
-            i for i in alg.find_suitable_servers(job, self.feats) if i not in revoked
+            i for i in alg.find_suitable_servers(job, feats) if i not in revoked
         ]
         if not suitable:
-            suitable = alg.find_suitable_servers(job, self.feats)
-        lifetimes = alg.compute_lifetime(self.feats, suitable)
+            suitable = alg.find_suitable_servers(job, feats)
+        lifetimes = alg.compute_lifetime(feats, suitable)
         policy = SiwoftPolicy()
-        S = alg.server_based_lifetime(job, lifetimes, policy, self.feats)
+        S = alg.server_based_lifetime(job, lifetimes, policy, feats)
         return alg.highest(S)
 
-    def _pick_market_random(self, job: Job, revoked: Set[int], salt: int) -> int:
+    def _pick_market_random(self, job: Job, feats, revoked: Set[int], salt: int) -> int:
         cands = [
-            i for i in alg.find_suitable_servers(job, self.feats) if i not in revoked
+            i for i in alg.find_suitable_servers(job, feats) if i not in revoked
         ]
         if not cands:
-            cands = alg.find_suitable_servers(job, self.feats)
+            cands = alg.find_suitable_servers(job, feats)
         rng = np.random.default_rng((self.seed, salt))
         return int(cands[rng.integers(len(cands))])
 
-    def _revocation_step(self, market: int, from_step: int) -> Optional[int]:
-        """Map the market's next trace revocation to a global step index."""
-        hour0 = from_step / self.steps_per_hour
-        h = int(math.ceil(hour0))
+    def _revocation_step(
+        self, market: int, from_step: int, wall: float, rate: float
+    ) -> Optional[int]:
+        """Map the market's next trace revocation (first trace hour ≥
+        ``wall`` whose price crosses on-demand) to a global step index,
+        at this market's shape-dependent step rate (steps per trace hour)."""
+        h = int(math.ceil(wall))
         tail = self._rev[market, h:]
         if not tail.any():
             return None
         rev_hour = h + int(np.argmax(tail))
-        return int(rev_hour * self.steps_per_hour)
+        return from_step + max(int((rev_hour - wall) * rate), 0)
 
     # ------------------------------------------------------------------
     def run(self, total_steps: int) -> OrchestratorReport:
@@ -203,8 +273,10 @@ class SpotTrainingOrchestrator:
         moved_total = 0
         restore_total = 0
         reshard_events = 0
+        first_ecc = 0.0
         active_key = None  # plan.key the live state is laid out for
         step = 0
+        wall = 0.0  # trace wall-clock hours; advances at the shape's rate
         t0 = time.perf_counter()
 
         # FT baseline: fixed injected revocation schedule (paper methodology)
@@ -216,17 +288,29 @@ class SpotTrainingOrchestrator:
         )
 
         while step < total_steps:
+            # provisioning consults the measured-throughput-corrected menu:
+            # after a segment on a shape, its real steps/sec feeds back into
+            # the cost-to-complete ranking for every later pick
+            feats = self._effective_feats()
+            remaining = alg.remaining_job(job, (total_steps - step) / self.steps_per_hour)
             if self.mode in ("siwoft", "hybrid"):
-                market = self._pick_market_siwoft(job, revoked)
+                market = self._pick_market_siwoft(remaining, feats, revoked)
             else:
-                market = self._pick_market_random(job, revoked, salt=len(markets))
+                market = self._pick_market_random(remaining, feats, revoked, salt=len(markets))
+            if not markets:
+                first_ecc = alg.expected_cost_to_complete(
+                    job.length_hours, feats, market
+                )
             markets.append(market)
             m = self.future.markets[market]
             plan = self.meshman.plan_for(m.device_count)
             mesh_shapes.append(plan.mesh_shape)
             jitted, state_sh = self._jitted_for(plan)
+            # steps this market delivers per trace hour: reference rate × its
+            # shape's (calibrated) relative throughput
+            rate = self.steps_per_hour * self._throughput_of(feats, market)
 
-            session = Session(market, step / self.steps_per_hour)
+            session = Session(market, wall)
             session.add("startup", self.ov.startup_hours)
 
             # live cross-mesh migration: the state's current layout differs
@@ -255,7 +339,9 @@ class SpotTrainingOrchestrator:
             if self.mode == "checkpoint":
                 rev_at = ft_rev_steps[revs] if revs < len(ft_rev_steps) else None
             else:
-                rev_at = self._revocation_step(market, step)
+                rev_at = self._revocation_step(
+                    market, step, wall + session.used_hours, rate
+                )
 
             seg_start = step
             seg_state = state
@@ -275,13 +361,17 @@ class SpotTrainingOrchestrator:
                 state = res.state
                 losses.extend(res.losses)
                 useful += res.steps_done
-                session.add("execution", res.steps_done / self.steps_per_hour)
+                session.add("execution", res.steps_done / rate)
                 step += res.steps_done
+                # feed the measured step rate back into the throughput model
+                self.thr_tracker.observe(
+                    plan.key, res.steps_done, sum(res.step_seconds)
+                )
             except Revoked as r:
                 done = max(r.last_step - seg_start + 1, 0)
                 revs += 1
                 revoked.add(market)
-                session.add("re_execution", done / self.steps_per_hour)
+                session.add("re_execution", done / rate)
                 if self.mode == "checkpoint" and self.ckpt is not None:
                     self.ckpt.wait()
                     latest = self.ckpt.latest_step()
@@ -327,7 +417,9 @@ class SpotTrainingOrchestrator:
                     state = seg_state
                     step = seg_start
                     wasted += done
-            bill_session(session, lambda m, h: self.future.spot_price(m, h), bd)
+            wall += bill_session(
+                session, lambda m, h: self.future.spot_price(m, h), bd
+            )
 
         if self.ckpt is not None:
             self.ckpt.wait()
@@ -345,4 +437,9 @@ class SpotTrainingOrchestrator:
             reshard_events=reshard_events,
             mesh_shapes=mesh_shapes,
             breakdown=bd,
+            shape_steps_per_hour={
+                f"{k[1][0]}x{k[1][1]}": sps * 3600.0
+                for k, sps in self.thr_tracker.measured.items()
+            },
+            cost_to_complete=first_ecc,
         )

@@ -55,13 +55,32 @@ class OverheadModel:
         return bytes_moved / (max(interconnect_gbps, 1e-9) * 1e9) / 3600.0
 
 
+def work_to_wall_hours(work_hours: float, throughput: float) -> float:
+    """Wall-clock hours to complete ``work_hours`` of reference work at
+    relative throughput θ — THE work↔wall conversion rule; every layer
+    (provisioner admission, simulator progress, orchestrator billing)
+    delegates here."""
+    return float(work_hours) / max(float(throughput), 1e-9)
+
+
 @dataclasses.dataclass(frozen=True)
 class Job:
-    """A batch job: pure-compute length (hours) and memory footprint (GB)."""
+    """A batch job: pure-compute length (hours) and memory footprint (GB).
+
+    ``length_hours`` is WORK, not wall time: hours of compute on the
+    1-device reference shape (relative throughput 1.0). A market whose
+    shape delivers throughput θ finishes the job in ``length_hours / θ``
+    wall hours — see :meth:`wall_hours_on`. On a single-device menu
+    (θ ≡ 1 everywhere) work and wall time coincide, which is the paper's
+    setting."""
 
     length_hours: float
     memory_gb: float
     job_id: int = 0
+
+    def wall_hours_on(self, throughput: float) -> float:
+        """Wall-clock hours on a shape with relative throughput θ."""
+        return work_to_wall_hours(self.length_hours, throughput)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -62,7 +62,12 @@ def select_portfolio(
             return 1.0 - max(float(feats.corr[m, p]) for p in chain)
 
         def score(m: int) -> float:
-            price = max(float(feats.avg_price[m]), 1e-9)
+            # price per unit of WORK (the shape-throughput-normalized $/h):
+            # a pricey fast mesh can outscore a cheap slow one
+            price = max(
+                float(feats.avg_price[m]) / max(float(feats.throughput[m]), 1e-9),
+                1e-9,
+            )
             return math.log(max(lifetimes[m], 1.001)) * max(div(m), 0.0) / price**policy.price_gamma
 
         # diversity first, lexicographically: the heterogeneous menu spans a
@@ -85,7 +90,11 @@ def portfolio_failover_order(
     lifetimes = alg.compute_lifetime(feats, suitable)
     tail = sorted(
         (i for i in suitable if i not in chain),
-        key=lambda i: (-lifetimes[i], float(feats.avg_price[i]), i),
+        key=lambda i: (
+            -lifetimes[i],
+            alg.expected_cost_to_complete(job.length_hours, feats, i),
+            i,
+        ),
     )
     return chain + tail
 

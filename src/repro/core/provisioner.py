@@ -27,9 +27,23 @@ matches the job's sharded state footprint against the instance's TOTAL
 memory (``memory_gb × device_count``) and keeps every shape within a
 bounded overshoot (default 4×) of the tightest fit. The suitable set
 therefore spans heterogeneous mesh shapes (Voorsluys & Buyya; Qu et al.)
-and Algorithm 1's MTTR ordering — with the historical-price tie-break —
-chooses among them; a revocation can re-provision onto a *different*
-shape, which the orchestrator handles as a live cross-mesh reshard.
+and Algorithm 1's MTTR ordering chooses among them; a revocation can
+re-provision onto a *different* shape, which the orchestrator handles as
+a live cross-mesh reshard.
+
+Throughput deviation (beyond the paper): every shape carries a relative
+throughput (``market.shape_throughput`` — sublinear in device count,
+mildly increasing in interconnect, ``1.0`` for the 1-device reference),
+so a job's wall time is shape-dependent. Ranking within an MTTR tier is
+by *expected cost-to-complete* — historical price integrated over the
+shape's wall time, inflated by the restart-expectation ``1/(1 - wall/MTTR)``
+— instead of raw $/h (:func:`expected_cost_to_complete`). The MTTR
+admission filter compares the market's lifetime against the job's wall
+time ON THAT SHAPE. Heterogeneous-spot cost-efficiency requires
+normalizing price by delivered throughput (Qu et al., arXiv:1509.05197;
+Voorsluys & Buyya, arXiv:1110.5969); with a single-device menu every
+throughput is 1.0 and all of this degenerates to the paper's exact
+price-vs-MTTR behavior.
 """
 from __future__ import annotations
 
@@ -39,12 +53,14 @@ from typing import Dict, List, Optional, Sequence, Set
 import numpy as np
 
 from repro.core.market import MarketSet, revocation_probability
-from repro.core.policies import Job, SiwoftPolicy
+from repro.core.policies import Job, SiwoftPolicy, work_to_wall_hours
 
 
 @dataclasses.dataclass
 class MarketFeatures:
-    """The three §III-A features, computed ONCE from the history window."""
+    """The three §III-A features, computed ONCE from the history window,
+    plus the per-shape throughput (beyond the paper) that turns raw $/h
+    into $/unit-of-work."""
 
     mttr: np.ndarray          # (n_markets,) hours
     corr: np.ndarray          # (n_markets, n_markets) co-revocation in [0,1]
@@ -53,12 +69,15 @@ class MarketFeatures:
     avg_price: np.ndarray     # (n_markets,) mean historical spot price
     device_count: np.ndarray = None      # (n_markets,) devices per instance
     interconnect_gbps: np.ndarray = None  # (n_markets,) GB/s reshard bandwidth
+    throughput: np.ndarray = None         # (n_markets,) rel. steps/hour (1-dev ≡ 1)
 
     def __post_init__(self):
         if self.device_count is None:
             self.device_count = np.ones_like(self.memory_gb)
         if self.interconnect_gbps is None:
             self.interconnect_gbps = np.full_like(self.memory_gb, 10.0)
+        if self.throughput is None:
+            self.throughput = np.ones_like(self.memory_gb)
 
     @property
     def total_memory_gb(self) -> np.ndarray:
@@ -80,7 +99,47 @@ class MarketFeatures:
             interconnect_gbps=np.array(
                 [m.interconnect_gbps for m in history.markets], dtype=float
             ),
+            throughput=np.array(
+                [m.throughput for m in history.markets], dtype=float
+            ),
         )
+
+
+# --- throughput-aware cost-to-complete (beyond the paper) -------------------
+
+# Expected-cost revocation-risk cap: a market whose estimated revocation
+# probability reaches 1 would have infinite expected cost; clip so the
+# fallback ordering over hopeless markets stays finite and price-sensitive.
+MAX_REVOCATION_RISK = 0.95
+
+
+def wall_hours(work_hours: float, feats: MarketFeatures, market: int) -> float:
+    """Wall-clock hours market ``market`` needs for ``work_hours`` of work
+    (work is measured in hours on the 1-device reference shape)."""
+    return work_to_wall_hours(work_hours, float(feats.throughput[market]))
+
+
+def cost_to_complete(work_hours: float, feats: MarketFeatures, market: int) -> float:
+    """$ to run ``work_hours`` of reference work on ``market``, ignoring
+    revocations: historical price integrated over the shape-dependent wall
+    time — i.e. price/throughput, not raw price."""
+    return float(feats.avg_price[market]) * wall_hours(work_hours, feats, market)
+
+
+def expected_cost_to_complete(
+    work_hours: float, feats: MarketFeatures, market: int
+) -> float:
+    """Revocation-risk-adjusted cost-to-complete.
+
+    A restart-from-scratch policy that gets revoked must repurchase the
+    whole run; with per-attempt revocation probability v (the paper's
+    ``wall / MTTR`` estimate) the expected number of purchases is ~1/(1-v),
+    so the expected bill inflates by that factor. Longer wall occupancy —
+    i.e. slower shapes — inflates more, which is exactly how a pricier
+    8-device shape can undercut a cheap 1-device shape on a long job."""
+    wall = wall_hours(work_hours, feats, market)
+    v = min(wall / max(float(feats.mttr[market]), 1e-9), MAX_REVOCATION_RISK)
+    return cost_to_complete(work_hours, feats, market) / (1.0 - v)
 
 
 # --- Alg. 1 steps -----------------------------------------------------------
@@ -91,7 +150,11 @@ def find_suitable_servers(
     """Step 2, menu-aware: a market is suitable when the job's sharded state
     footprint fits the instance shape's TOTAL memory
     (``memory_gb × device_count``) and the shape is not wastefully large
-    (total ≤ ``max_overshoot`` × the tightest fitting total).
+    (total ≤ ``max_overshoot`` × the tightest fitting total). The returned
+    candidates are ordered by expected cost-to-complete ascending (price
+    integrated over the shape-dependent wall time, risk-adjusted) — NOT by
+    raw $/h: a pricier shape that finishes the work faster ranks ahead of
+    a cheap slow one.
 
     Deviation from the paper (which keeps only the single smallest memory
     size): the bounded-overshoot band deliberately keeps *several mesh
@@ -103,11 +166,15 @@ def find_suitable_servers(
     if fits.size == 0:
         return []
     best = fits.min()
-    return [
+    suitable = [
         i
         for i in range(len(total))
         if total[i] >= job.memory_gb and total[i] <= max_overshoot * best
     ]
+    return sorted(
+        suitable,
+        key=lambda i: (expected_cost_to_complete(job.length_hours, feats, i), i),
+    )
 
 
 def compute_lifetime(feats: MarketFeatures, suitable: Sequence[int]) -> Dict[int, float]:
@@ -121,18 +188,32 @@ def server_based_lifetime(
     policy: SiwoftPolicy,
     feats: Optional[MarketFeatures] = None,
 ) -> List[int]:
-    """Step 5: keep markets whose lifetime admits the job (MTTR ≥ 2 × len),
-    sorted by lifetime descending. Ties (e.g. several never-revoking
-    markets) break toward the historically cheaper market — the paper does
-    not specify tie-breaking; see module docstring. Falls back to all
-    candidates (still MTTR-descending) when the filter is empty."""
+    """Step 5: keep markets whose lifetime admits the job (MTTR ≥ 2 × the
+    job's *wall time on that shape*), sorted by lifetime descending. Ties
+    (e.g. several never-revoking markets, or markets sharing a revocation
+    count) break toward the lowest expected cost-to-complete — price
+    integrated over the shape-dependent wall time, risk-adjusted — instead
+    of raw $/h, so among equally-safe markets Algorithm 1 deliberately
+    provisions the shape that finishes the work cheapest, which may be a
+    pricier-per-hour but faster mesh. The paper does not specify
+    tie-breaking; see module docstring. Falls back to all candidates
+    (same ordering) when the filter is empty."""
     admitted = [
         i for i, lt in lifetimes.items()
-        if lt >= policy.lifetime_factor * job.length_hours
+        if lt >= policy.lifetime_factor * _wall(job, feats, i)
     ]
     pool = admitted if admitted else list(lifetimes)
-    price = (lambda i: float(feats.avg_price[i])) if feats is not None else (lambda i: 0.0)
-    return sorted(pool, key=lambda i: (-lifetimes[i], price(i), i))
+    return sorted(pool, key=lambda i: (-lifetimes[i], _ecc(job, feats, i), i))
+
+
+def _wall(job: Job, feats: Optional[MarketFeatures], i: int) -> float:
+    """Job wall time on market ``i`` (== length when features are absent)."""
+    return wall_hours(job.length_hours, feats, i) if feats is not None else job.length_hours
+
+
+def _ecc(job: Job, feats: Optional[MarketFeatures], i: int) -> float:
+    """Tie-break key: expected cost-to-complete (0 when features absent)."""
+    return expected_cost_to_complete(job.length_hours, feats, i) if feats is not None else 0.0
 
 
 def highest(S: Sequence[int]) -> int:
@@ -140,9 +221,13 @@ def highest(S: Sequence[int]) -> int:
     return S[0]
 
 
-def lifetime_admits(job: Job, lifetime: float, policy: SiwoftPolicy) -> bool:
-    """Step 8 guard."""
-    return lifetime >= policy.lifetime_factor * job.length_hours
+def lifetime_admits(
+    job: Job, lifetime: float, policy: SiwoftPolicy, throughput: float = 1.0
+) -> bool:
+    """Step 8 guard, throughput-aware: the market must outlive the job's
+    wall occupancy on ITS shape, not the reference-length — a fast shape
+    shrinks its own exposure window."""
+    return lifetime >= policy.lifetime_factor * job.wall_hours_on(throughput)
 
 
 def find_low_correlation(
@@ -161,17 +246,34 @@ def restrict_after_revocation(
     lifetimes: Dict[int, float],
     already_revoked: Set[int],
     feats: Optional[MarketFeatures] = None,
+    job: Optional[Job] = None,
 ) -> List[int]:
-    """Step 14 (+ fallback): S ← (S \\ {s}) ∩ W, lifetime-descending."""
+    """Step 14 (+ fallback): S ← (S \\ {s}) ∩ W, lifetime-descending with
+    the expected-cost-to-complete tie-break (pass ``job`` + ``feats`` to
+    enable it; ``job`` carries the remaining work the cost is integrated
+    over)."""
     rest = [i for i in S if i != revoked and i in W]
     if not rest:
         rest = [i for i in lifetimes if i not in already_revoked and i != revoked]
-    price = (lambda i: float(feats.avg_price[i])) if feats is not None else (lambda i: 0.0)
-    return sorted(rest, key=lambda i: (-lifetimes[i], price(i), i))
+    if job is not None:
+        tiebreak = lambda i: _ecc(job, feats, i)
+    elif feats is not None:
+        tiebreak = lambda i: float(feats.avg_price[i])
+    else:
+        tiebreak = lambda i: 0.0
+    return sorted(rest, key=lambda i: (-lifetimes[i], tiebreak(i), i))
+
+
+def remaining_job(job: Job, remaining_work_hours: float) -> Job:
+    """The job with only its unfinished work — what re-provisioning after a
+    revocation should integrate price/throughput over."""
+    return dataclasses.replace(
+        job, length_hours=max(float(remaining_work_hours), 1e-9)
+    )
 
 
 def plan_first_choice(job: Job, feats: MarketFeatures, policy: SiwoftPolicy) -> int:
     """Convenience: the market Alg. 1 provisions first for this job."""
     suitable = find_suitable_servers(job, feats)
     lifetimes = compute_lifetime(feats, suitable)
-    return highest(server_based_lifetime(job, lifetimes, policy))
+    return highest(server_based_lifetime(job, lifetimes, policy, feats))

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import provisioner as alg
 from repro.core.accounting import Breakdown, Session, bill_session
-from repro.core.market import MarketSet, revocation_probability
+from repro.core.market import MarketSet
 from repro.core.policies import (
     CheckpointPolicy,
     Job,
@@ -65,10 +65,19 @@ class Simulator:
         h = min(int(hour), self.future.n_hours - 1)
         return float(self.future.prices[market_id, h])
 
-    def _od_price(self, job: Job) -> float:
-        """Cheapest on-demand instance that fits the job."""
+    def _throughput(self, market_id: int) -> float:
+        """Relative work rate of the market's shape (1-device ≡ 1.0)."""
+        return max(float(self.feats.throughput[market_id]), 1e-9)
+
+    def _od_choice(self, job: Job) -> Tuple[float, float]:
+        """On-demand reference, throughput-aware: (price $/h, throughput) of
+        the fitting shape with the lowest cost-to-complete — od price
+        integrated over the shape's wall time, not the lowest raw $/h. On a
+        single-device menu this degenerates to the cheapest fitting
+        instance (the paper's reference)."""
         fit = [m for m in self.future.markets if m.total_memory_gb >= job.memory_gb]
-        return min(m.on_demand_price for m in fit)
+        best = min(fit, key=lambda m: m.on_demand_price / m.throughput)
+        return best.on_demand_price, best.throughput
 
     def _select_ft_market(
         self,
@@ -151,6 +160,9 @@ class Simulator:
 
     # --- P-SIWOFT ------------------------------------------------------
     def _run_siwoft(self, job: Job, policy: SiwoftPolicy, start_wall: float) -> Breakdown:
+        """Progress is tracked in WORK hours (reference-shape compute); the
+        provisioned market's shape converts work ↔ wall at its throughput
+        θ, so a faster shape bills fewer wall hours for the same job."""
         bd = Breakdown()
         suitable = alg.find_suitable_servers(job, self.feats)          # step 2
         lifetimes = alg.compute_lifetime(self.feats, suitable)         # step 3
@@ -162,7 +174,10 @@ class Simulator:
 
         for _ in range(MAX_ATTEMPTS):                                  # step 6
             s = alg.highest(S)                                         # step 7
-            v = revocation_probability(job.length_hours, lifetimes.get(s, 1e-9))  # step 9
+            thr = self._throughput(s)
+            # step 9's revocation-probability estimate (wall / MTTR) is
+            # folded into the expected-cost-to-complete ranking that
+            # ordered S — see alg.expected_cost_to_complete
             session = Session(s, wall)
             session.add("startup", self.ov.startup_hours)              # provision (step 10)
             resume_from = last_ckpt if policy.uses_checkpoints else 0.0
@@ -173,21 +188,22 @@ class Simulator:
             compute_start = wall + session.used_hours
             progress = resume_from
 
-            def run_until(target_progress: float, available: float) -> Tuple[float, float]:
-                """Advance ≤ available hours toward target; returns (new
-                progress, hours spent) split into exec/re-exec components."""
+            def run_until(target_progress: float, available_wall: float) -> Tuple[float, float]:
+                """Advance ≤ available wall hours toward the target work
+                progress at rate θ; returns (new progress, wall hours
+                spent) split into exec/re-exec components."""
                 nonlocal max_progress
-                span = min(target_progress - progress, available)
+                span = min(target_progress - progress, available_wall * thr)
                 if span <= 0:
                     return progress, 0.0
                 redo = max(0.0, min(max_progress, progress + span) - progress)
                 fresh = span - redo
                 if redo > 0:
-                    session.add("re_execution", redo)
+                    session.add("re_execution", redo / thr)
                 if fresh > 0:
-                    session.add("execution", fresh)
+                    session.add("execution", fresh / thr)
                 max_progress = max(max_progress, progress + span)
-                return progress + span, span
+                return progress + span, span / thr
 
             if policy.uses_checkpoints:
                 # hybrid (beyond paper): periodic checkpoints while running
@@ -218,7 +234,15 @@ class Simulator:
             bd.revocations += 1
             revoked.add(s)
             W = alg.find_low_correlation(self.feats, s, policy)         # step 13
-            S = alg.restrict_after_revocation(S, s, W, lifetimes, revoked, self.feats)  # step 14
+            # re-rank for the REMAINING work: the cost-to-complete tie-break
+            # integrates price/throughput over what is left — for hybrid,
+            # everything past the newest checkpoint (last_ckpt may have
+            # advanced during this attempt); for pure siwoft, the whole job
+            surviving = last_ckpt if policy.uses_checkpoints else 0.0
+            rem = alg.remaining_job(job, job.length_hours - surviving)
+            S = alg.restrict_after_revocation(
+                S, s, W, lifetimes, revoked, self.feats, job=rem
+            )                                                          # step 14
             wall = max(wall, 0.0 if t_rev is None else t_rev)
         raise RuntimeError("siwoft: exceeded MAX_ATTEMPTS")
 
@@ -233,17 +257,19 @@ class Simulator:
         wall = start_wall
         max_progress = 0.0
         for s_m in order:
+            thr = self._throughput(s_m)
             session = Session(s_m, wall)
             session.add("startup", self.ov.startup_hours)
             t_rev = self._next_trace_revocation(s_m, wall)
             compute_start = wall + session.used_hours
             horizon = math.inf if t_rev is None else t_rev - compute_start
-            span = min(job.length_hours, max(horizon, 0.0))
+            # work done before the revocation horizon, at the shape's rate
+            span = min(job.length_hours, max(horizon, 0.0) * thr)
             redo = min(max_progress, span)
             if redo > 0:
-                session.add("re_execution", redo)
+                session.add("re_execution", redo / thr)
             if span - redo > 0:
-                session.add("execution", span - redo)
+                session.add("execution", (span - redo) / thr)
             max_progress = max(max_progress, span)
             wall += bill_session(session, self._price, bd)
             if span >= job.length_hours:
@@ -269,6 +295,7 @@ class Simulator:
 
         for _ in range(MAX_ATTEMPTS):
             m = self._select_ft_market(job, wall, revoked, policy.market_selection, salt=11)
+            thr = self._throughput(m)
             session = Session(m, wall)
             session.add("startup", self.ov.startup_hours)
             if not first:
@@ -276,6 +303,8 @@ class Simulator:
             first = False
 
             # run until either completion or the next injected revocation
+            # (progress / revocation points are WORK coordinates; the
+            # session bills wall hours at the provisioned shape's rate)
             while progress < job.length_hours and progress < next_rev:
                 stop = min(
                     last_ckpt + policy.ckpt_interval_hours,
@@ -286,9 +315,9 @@ class Simulator:
                 redo = max(0.0, min(max_progress, stop) - progress)
                 fresh = span - redo
                 if redo > 0:
-                    session.add("re_execution", redo)
+                    session.add("re_execution", redo / thr)
                 if fresh > 0:
-                    session.add("execution", fresh)
+                    session.add("execution", fresh / thr)
                 max_progress = max(max_progress, stop)
                 progress = stop
                 if (
@@ -328,14 +357,15 @@ class Simulator:
 
         for _ in range(MAX_ATTEMPTS):
             m = self._select_ft_market(job, wall, revoked, policy.market_selection, salt=12)
+            thr = self._throughput(m)
             session = Session(m, wall)
             session.add("startup", self.ov.startup_hours)
             span = min(job.length_hours, next_rev) - progress
             redo = max(0.0, min(max_progress, progress + span) - progress)
             if redo > 0:
-                session.add("re_execution", redo)
+                session.add("re_execution", redo / thr)
             if span - redo > 0:
-                session.add("execution", span - redo)
+                session.add("execution", (span - redo) / thr)
             max_progress = max(max_progress, progress + span)
             progress += span
             if progress >= job.length_hours:
@@ -366,21 +396,28 @@ class Simulator:
 
         Replicas must be interchangeable (any survivor IS the job), so all
         of them are placed within the tightest-fitting instance-shape
-        class — the heterogeneous menu is a siwoft/portfolio degree of
-        freedom, not a replication one."""
+        class at that class's fastest throughput — the heterogeneous menu
+        is a siwoft/portfolio degree of freedom, not a replication one."""
         bd = Breakdown()
         totals = self.feats.total_memory_gb
         best_total = totals[totals >= job.memory_gb].min()
-        shape_class = {i for i in range(len(totals)) if totals[i] == best_total}
+        cls = [i for i in range(len(totals)) if totals[i] == best_total]
+        # same-total markets can still be different mesh shapes (e.g. 1×32 GB
+        # vs 2×16 GB): pin replicas to the fastest shape in the class so
+        # every replica runs at one rate and any survivor IS the job
+        thr = max(self._throughput(i) for i in cls)
+        shape_class = {i for i in cls if self._throughput(i) == thr}
+        wall_len = job.wall_hours_on(thr)
         k = policy.degree
-        kills = self._ft_revocation_points(job, n_rev, salt=3)  # wall offsets
+        # kill times: wall offsets, uniform over the replica's wall length
+        kills = [t / thr for t in self._ft_revocation_points(job, n_rev, salt=3)]
         # replica r is killed at kills[i] for i ≡ r (mod k)
         last_kill = [0.0] * k
         kill_lists: List[List[float]] = [[] for _ in range(k)]
         for i, t in enumerate(kills):
             kill_lists[i % k].append(t)
             last_kill[i % k] = max(last_kill[i % k], t)
-        finish = [lk + job.length_hours for lk in last_kill]
+        finish = [lk + wall_len for lk in last_kill]
         winner = int(np.argmin(finish))
         t_star = finish[winner]
 
@@ -399,7 +436,7 @@ class Simulator:
                 excl.add(m)
                 session = Session(m, start_wall + t0)
                 session.add("startup", self.ov.startup_hours)
-                run = min(t1 - t0, job.length_hours)
+                run = min(t1 - t0, wall_len)
                 is_winning_run = r == winner and s_i == len(boundaries) - 2
                 session.add("execution" if is_winning_run else "re_execution", run)
                 if s_i < len(boundaries) - 2:
@@ -411,9 +448,9 @@ class Simulator:
     # --- on-demand reference ---------------------------------------------
     def _run_on_demand(self, job: Job, start_wall: float) -> Breakdown:
         bd = Breakdown()
-        price = self._od_price(job)
+        price, thr = self._od_choice(job)
         session = Session(-1, start_wall)
         session.add("startup", self.ov.startup_hours)
-        session.add("execution", job.length_hours)
+        session.add("execution", job.wall_hours_on(thr))
         bill_session(session, lambda m, h: price, bd)
         return bd

@@ -94,6 +94,56 @@ class ElasticMeshManager:
 
 
 # ---------------------------------------------------------------------------
+# Measured throughput per mesh shape
+# ---------------------------------------------------------------------------
+
+class ThroughputTracker:
+    """EMA of measured steps/sec per :attr:`MeshPlan.key`.
+
+    The provisioner's menu predicts each shape's relative speed analytically
+    (``repro.core.market.shape_throughput``); the orchestrator records what
+    ``run_segment`` actually delivered per mesh shape here and uses
+    :meth:`correction` to scale the analytic prediction by the measured
+    deviation — so a shape that scales worse than the model's efficiency
+    exponent stops looking cheap-per-step after one segment on it.
+    """
+
+    def __init__(self, ema: float = 0.5):
+        self.ema = ema
+        self._sps: Dict[Any, float] = {}
+
+    def observe(self, key, steps: int, seconds: float) -> None:
+        if steps <= 0 or seconds <= 0:
+            return
+        sps = steps / seconds
+        prev = self._sps.get(key)
+        self._sps[key] = sps if prev is None else self.ema * sps + (1 - self.ema) * prev
+
+    def steps_per_sec(self, key) -> Optional[float]:
+        return self._sps.get(key)
+
+    @property
+    def measured(self) -> Dict[Any, float]:
+        return dict(self._sps)
+
+    def correction(self, key, analytic: Dict[Any, float]) -> float:
+        """Measured-vs-analytic speed ratio for ``key``, relative to the
+        slowest-predicted observed shape (which anchors the scale).
+
+        ``analytic`` maps plan keys to the model's predicted relative
+        throughput. Returns 1.0 until two distinct shapes have been
+        measured — a single observation fixes the anchor, not a ratio."""
+        if key not in self._sps or len(self._sps) < 2:
+            return 1.0
+        ref = min(self._sps, key=lambda k: analytic.get(k, 1.0))
+        if ref == key:
+            return 1.0
+        predicted = analytic.get(key, 1.0) / max(analytic.get(ref, 1.0), 1e-9)
+        observed = self._sps[key] / max(self._sps[ref], 1e-9)
+        return observed / max(predicted, 1e-9)
+
+
+# ---------------------------------------------------------------------------
 # Byte-level reshard cost
 # ---------------------------------------------------------------------------
 

@@ -1,5 +1,12 @@
 """Simulator-level reproduction of the paper's Fig. 1 claims (C1–C3) plus
-accounting invariants."""
+accounting invariants.
+
+These run on the LEGACY single-device menu (``legacy_menu()``): the paper
+models instances as memory sizes only, every shape has throughput 1.0, and
+the C1–C3 orderings are claims about that homogeneous setting. The
+heterogeneous default menu — where completion time varies with
+device_count and provisioning trades price against speed — is covered by
+tests/test_throughput.py."""
 import numpy as np
 import pytest
 
@@ -13,6 +20,7 @@ from repro.core import (
     Simulator,
     SiwoftPolicy,
     generate_markets,
+    legacy_menu,
     split_history_future,
 )
 
@@ -23,7 +31,9 @@ N_SEEDS = 5
 def sims():
     out = []
     for seed in range(N_SEEDS):
-        ms = generate_markets(seed=seed, n_hours=24 * 90 + 24 * 45)
+        ms = generate_markets(
+            seed=seed, n_hours=24 * 90 + 24 * 45, menu=legacy_menu()
+        )
         hist, fut = split_history_future(ms, 24 * 90)
         out.append(Simulator(hist, fut, seed=seed))
     return out

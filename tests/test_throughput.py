@@ -1,0 +1,280 @@
+"""Per-shape throughput model: price-vs-speed provisioning (beyond the
+paper — see ISSUE 3 / docs/trace-format.md).
+
+Covers the three contract points of the change:
+* the analytic model is strictly monotone and sublinear in device count,
+* cost-to-complete ranking can flip toward a pricier-but-faster shape on
+  a long job (the risk-adjusted integration over the remaining work),
+* legacy single-device market sets reproduce the pre-throughput simulator
+  exactly (throughput ≡ 1, execution time == job length, ranking ==
+  MTTR-then-price).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Job,
+    OnDemandPolicy,
+    Simulator,
+    SiwoftPolicy,
+    generate_markets,
+    legacy_menu,
+    load_csv_traces,
+    shape_throughput,
+    split_history_future,
+)
+from repro.core import provisioner as alg
+from repro.core.market import INSTANCE_MENU, Market, MarketSet
+from repro.core.provisioner import MarketFeatures
+
+
+# --- analytic model ---------------------------------------------------------
+
+def test_one_device_is_the_unit_reference():
+    """θ(1, ·) == 1.0 exactly, whatever the interconnect — the anchor that
+    keeps legacy single-device traces bit-identical."""
+    for bw in (1.0, 10.0, 50.0, 999.0):
+        assert shape_throughput(1, bw) == 1.0
+
+
+def test_more_devices_strictly_faster_but_sublinear():
+    counts = [1, 2, 4, 8, 16, 32]
+    for bw in (10.0, 25.0, 60.0):
+        thr = [shape_throughput(n, bw) for n in counts]
+        for a, b in zip(thr, thr[1:]):
+            assert b > a  # strictly more steps/hour
+        for n in counts:
+            assert shape_throughput(2 * n, bw) < 2 * shape_throughput(n, bw)
+
+
+def test_interconnect_helps_multi_device_shapes():
+    assert shape_throughput(4, 50.0) > shape_throughput(4, 10.0)
+    assert shape_throughput(8, 60.0) > shape_throughput(8, 25.0)
+
+
+def test_menu_carries_throughput_into_features():
+    ms = generate_markets(seed=0, n_hours=24 * 30)
+    feats = MarketFeatures.from_history(ms)
+    for i, m in enumerate(ms.markets):
+        assert feats.throughput[i] == pytest.approx(
+            shape_throughput(m.device_count, m.interconnect_gbps)
+        )
+    assert feats.throughput.max() > 1.0  # the menu is heterogeneous
+
+
+# --- cost-to-complete ranking ----------------------------------------------
+
+def _two_shape_features(mttr_hours: float = 100.0) -> MarketFeatures:
+    """Market 0: cheap 1-device. Market 1: pricier 8-device (more $/h AND
+    more $ per unit of work). Equal MTTR so the lifetime sort ties and the
+    cost-to-complete tie-break decides."""
+    n = 2
+    return MarketFeatures(
+        mttr=np.array([mttr_hours, mttr_hours]),
+        corr=np.zeros((n, n)),
+        memory_gb=np.array([64.0, 8.0]),
+        on_demand=np.array([0.2, 2.0]),
+        avg_price=np.array([0.1, 1.0]),
+        device_count=np.array([1.0, 8.0]),
+        interconnect_gbps=np.array([10.0, 50.0]),
+        throughput=np.array([1.0, shape_throughput(8, 50.0)]),
+    )
+
+
+def test_cost_to_complete_is_price_over_throughput():
+    feats = _two_shape_features()
+    work = 10.0
+    assert alg.cost_to_complete(work, feats, 0) == pytest.approx(0.1 * 10.0)
+    assert alg.cost_to_complete(work, feats, 1) == pytest.approx(
+        1.0 * 10.0 / shape_throughput(8, 50.0)
+    )
+
+
+def test_ranking_flips_to_faster_shape_on_long_job():
+    """Short job: the cheap 1-device shape wins. Long job: its wall time
+    approaches the MTTR, the restart expectation inflates its bill, and the
+    pricier 8-device shape — still more $ per unit of work! — undercuts it
+    on expected cost-to-complete. Both are admitted (MTTR ≥ 2 × wall)."""
+    feats = _two_shape_features(mttr_hours=100.0)
+    policy = SiwoftPolicy()
+
+    def first_choice(work):
+        job = Job(length_hours=work, memory_gb=4.0)
+        suitable = alg.find_suitable_servers(job, feats)
+        assert sorted(suitable) == [0, 1]
+        lifetimes = alg.compute_lifetime(feats, suitable)
+        S = alg.server_based_lifetime(job, lifetimes, policy, feats)
+        return alg.highest(S)
+
+    assert first_choice(10.0) == 0    # cheap slow shape
+    assert first_choice(45.0) == 1    # pricier fast shape wins the long job
+    # the public helper must agree with the full Algorithm-1 path
+    assert alg.plan_first_choice(Job(10.0, 4.0), feats, policy) == 0
+    assert alg.plan_first_choice(Job(45.0, 4.0), feats, policy) == 1
+    # the flip is in the expected (risk-adjusted) cost, not the base cost:
+    assert alg.cost_to_complete(45.0, feats, 0) < alg.cost_to_complete(45.0, feats, 1)
+    assert alg.expected_cost_to_complete(45.0, feats, 0) > alg.expected_cost_to_complete(
+        45.0, feats, 1
+    )
+
+
+def test_admission_uses_wall_time_on_the_shape():
+    """A job too long for the slow shape's lifetime window is still
+    admitted on the fast shape: MTTR ≥ 2 × (work / θ)."""
+    feats = _two_shape_features(mttr_hours=100.0)
+    job = Job(length_hours=60.0, memory_gb=4.0)   # wall 60 h vs 7.6 h
+    assert not alg.lifetime_admits(job, 100.0, SiwoftPolicy(), throughput=1.0)
+    assert alg.lifetime_admits(
+        job, 100.0, SiwoftPolicy(), throughput=float(feats.throughput[1])
+    )
+
+
+# --- simulator: completion time varies with device_count --------------------
+
+def _flat_market_set(device_count: int, n_hours: int = 200) -> MarketSet:
+    """One never-revoking market of the given shape at a flat spot price."""
+    m = Market(
+        0, f"shape{device_count}", "r", "ra", 16, on_demand_price=1.0,
+        device_count=device_count, interconnect_gbps=25.0,
+    )
+    prices = np.full((1, n_hours), 0.3)
+    return MarketSet(markets=[m], prices=prices)
+
+
+@pytest.mark.parametrize("devices,expect_faster", [(1, False), (4, True)])
+def test_completion_time_scales_with_device_count(devices, expect_faster):
+    ms = _flat_market_set(devices)
+    hist, fut = split_history_future(ms, 100)
+    sim = Simulator(hist, fut, seed=0)
+    job = Job(length_hours=10.0, memory_gb=16.0)
+    bd = sim.run_job(job, SiwoftPolicy())
+    wall_exec = bd.time["execution"]
+    if expect_faster:
+        expected = 10.0 / shape_throughput(devices, 25.0)
+        assert wall_exec == pytest.approx(expected)
+        assert bd.wall_time < 10.0
+    else:
+        assert wall_exec == pytest.approx(10.0)
+
+
+def test_on_demand_reference_is_throughput_aware():
+    """The O baseline picks the fitting shape with the lowest od price per
+    unit of work, not the lowest raw $/h."""
+    fast = Market(0, "fast8", "r", "ra", 8, on_demand_price=2.0,
+                  device_count=8, interconnect_gbps=50.0)
+    slow = Market(1, "slow1", "r", "ra", 64, on_demand_price=0.5)
+    prices = np.full((2, 100), 0.1)
+    ms = MarketSet(markets=[fast, slow], prices=prices)
+    hist, fut = split_history_future(ms, 50)
+    sim = Simulator(hist, fut, seed=0)
+    job = Job(length_hours=10.0, memory_gb=32.0)
+    bd = sim.run_job(job, OnDemandPolicy())
+    # fast8: 2.0/7.89 ≈ 0.253 $/work-h beats slow1's 0.5 — despite 4× $/h
+    theta = shape_throughput(8, 50.0)
+    assert bd.time["execution"] == pytest.approx(10.0 / theta)
+    assert bd.total_cost >= 2.0 * (10.0 / theta)  # billed at the fast od price
+
+
+# --- legacy equivalence -----------------------------------------------------
+
+def test_legacy_menu_reproduces_prechange_simulator():
+    """Single-device market sets are the pre-throughput world: every
+    throughput is 1.0, execution time equals the job length exactly, and
+    Algorithm 1's ranking reduces to MTTR-descending with the historical
+    price tie-break (the pre-change ordering)."""
+    ms = generate_markets(seed=2, n_hours=24 * 90 + 24 * 30, menu=legacy_menu())
+    hist, fut = split_history_future(ms, 24 * 90)
+    feats = MarketFeatures.from_history(hist)
+    assert (feats.throughput == 1.0).all()
+
+    job = Job(length_hours=24.0, memory_gb=16.0)
+    suitable = alg.find_suitable_servers(job, feats)
+    lifetimes = alg.compute_lifetime(feats, suitable)
+    S = alg.server_based_lifetime(job, lifetimes, SiwoftPolicy(), feats)
+    # pre-change ordering: (-mttr, avg_price, index) over the admitted pool
+    admitted = [
+        i for i in suitable if lifetimes[i] >= 2.0 * job.length_hours
+    ] or list(suitable)
+    expected = sorted(
+        admitted, key=lambda i: (-lifetimes[i], float(feats.avg_price[i]), i)
+    )
+    assert S == expected
+
+    sim = Simulator(hist, fut, seed=2)
+    bd = sim.run_job(job, SiwoftPolicy())
+    assert bd.time["execution"] == pytest.approx(job.length_hours)
+
+
+def test_legacy_csv_defaults_to_unit_throughput(tmp_path):
+    rows = ["0,m5.xlarge,us-east-1,us-east-1a,16,0.192,0.05,0.06"]
+    p = tmp_path / "legacy.csv"
+    p.write_text("\n".join(rows))
+    loaded = load_csv_traces(str(p))
+    assert loaded.markets[0].steps_per_hour is None
+    assert loaded.markets[0].throughput == 1.0
+
+
+def test_csv_header_without_h0_marker_uses_header_width(tmp_path):
+    """Optional columns with UNLABELED price columns (the PR 2 topology
+    layout): the header names exactly the metadata block, so its length
+    determines the block width — the measured rate must not be parsed as
+    the hour-0 price."""
+    rows = [
+        "market_id,instance_type,region,zone,memory_gb,on_demand_price,"
+        "steps_per_hour",
+        "0,m5.xlarge,us-east-1,us-east-1a,16,0.192,3.1,0.05,0.06",
+    ]
+    p = tmp_path / "no_h0.csv"
+    p.write_text("\n".join(rows))
+    loaded = load_csv_traces(str(p))
+    assert loaded.markets[0].steps_per_hour == pytest.approx(3.1)
+    assert loaded.prices.shape == (1, 2)
+    assert loaded.prices[0, 0] == pytest.approx(0.05)
+
+
+def test_csv_steps_per_hour_column_overrides_model(tmp_path):
+    """A measured steps_per_hour column wins over the analytic model; an
+    empty cell means 'no measurement' and falls back to it."""
+    rows = [
+        "market_id,instance_type,region,zone,memory_gb,on_demand_price,"
+        "device_count,interconnect_gbps,steps_per_hour,h0,h1",
+        "0,g5.2xlarge,us-east-1,us-east-1a,16,0.402,2,25.0,1.5,0.1,0.1",
+        "1,m5.xlarge,us-east-1,us-east-1a,16,0.192,1,10.0,,0.05,0.05",
+    ]
+    p = tmp_path / "measured.csv"
+    p.write_text("\n".join(rows))
+    loaded = load_csv_traces(str(p))
+    assert loaded.markets[0].throughput == pytest.approx(1.5)  # measured
+    assert loaded.markets[1].throughput == 1.0                 # analytic
+    feats = MarketFeatures.from_history(loaded)
+    assert feats.throughput[0] == pytest.approx(1.5)
+    assert loaded.prices.shape == (2, 2)
+
+
+# --- measured-throughput feedback ------------------------------------------
+
+def test_throughput_tracker_corrects_analytic_model():
+    from repro.dist.meshplan import ThroughputTracker
+
+    tr = ThroughputTracker()
+    analytic = {"a": 1.0, "b": shape_throughput(4)}   # model predicts 3.03×
+    assert tr.correction("b", analytic) == 1.0        # nothing measured yet
+    tr.observe("a", steps=100, seconds=100.0)         # 1.0 step/s
+    assert tr.correction("b", analytic) == 1.0        # single-shape anchor
+    tr.observe("b", steps=100, seconds=50.0)          # measured only 2.0×
+    c = tr.correction("b", analytic)
+    assert c == pytest.approx(2.0 / shape_throughput(4))
+    assert c < 1.0                                    # scaled worse than model
+    assert tr.correction("a", analytic) == 1.0        # the anchor stays 1.0
+
+
+def test_tracker_ema_converges():
+    from repro.dist.meshplan import ThroughputTracker
+
+    tr = ThroughputTracker(ema=0.5)
+    for _ in range(10):
+        tr.observe("k", steps=10, seconds=2.0)
+    assert tr.steps_per_sec("k") == pytest.approx(5.0)
+    tr.observe("k", steps=0, seconds=1.0)   # degenerate observations ignored
+    tr.observe("k", steps=10, seconds=0.0)
+    assert tr.steps_per_sec("k") == pytest.approx(5.0)

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Docs presence + markdown link check (stdlib only; used by CI).
+
+* asserts the documentation set exists (README.md, docs/trace-format.md,
+  docs/accounting.md),
+* extracts every markdown link from every tracked *.md file and verifies
+  relative targets resolve to real files (anchors stripped; external
+  http(s)/mailto links are not fetched).
+
+Exit code 0 on success; prints each broken link and exits 1 otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+REQUIRED = ["README.md", "docs/trace-format.md", "docs/accounting.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
+# quoted exemplar material from OTHER repos — its links point into those
+# repos' trees, not ours
+SKIP_FILES = {"SNIPPETS.md"}
+
+
+def md_files():
+    for p in sorted(REPO.rglob("*.md")):
+        if p.name in SKIP_FILES:
+            continue
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def main() -> int:
+    errors = []
+    for rel in REQUIRED:
+        if not (REPO / rel).is_file():
+            errors.append(f"missing required doc: {rel}")
+
+    n_links = 0
+    for md in md_files():
+        for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            n_links += 1
+            path = target.split("#", 1)[0]
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}"
+                )
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {n_links} relative links across "
+          f"{len(list(md_files()))} markdown files; "
+          f"{len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
