@@ -8,6 +8,7 @@ simulator.py    discrete-event executor reproducing Fig. 1
 accounting.py   per-billing-cycle cost/time breakdowns
 orchestrator.py bridges the provisioner to the real JAX training loop
 """
+from repro.core.allocation import DCN_BANDWIDTH_GBPS, Allocation, Leg, combined_throughput
 from repro.core.market import (
     INSTANCE_MENU,
     InstanceShape,
@@ -32,8 +33,11 @@ from repro.core.policies import (
 from repro.core.portfolio import PortfolioPolicy
 from repro.core.provisioner import (
     MarketFeatures,
+    allocation_expected_cost_to_complete,
+    allocation_throughput,
     cost_to_complete,
     expected_cost_to_complete,
+    find_suitable_allocations,
 )
 from repro.core.simulator import Simulator
 from repro.core.accounting import Breakdown
@@ -47,4 +51,7 @@ __all__ = [
     "OverheadModel", "ReplicationPolicy", "SiwoftPolicy",
     "MarketFeatures", "PortfolioPolicy", "Simulator", "Breakdown",
     "cost_to_complete", "expected_cost_to_complete",
+    "Allocation", "Leg", "DCN_BANDWIDTH_GBPS", "combined_throughput",
+    "find_suitable_allocations", "allocation_throughput",
+    "allocation_expected_cost_to_complete",
 ]

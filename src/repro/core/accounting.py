@@ -44,6 +44,11 @@ class Breakdown:
     # wall-clock completion time; == total_time for serial policies, less for
     # replication (replicas burn hours in parallel)
     wall_time: float = 0.0
+    # per-leg cost: market_id -> $ billed against that market across every
+    # session (multi-leg allocations bill each leg at its own spot price;
+    # market_id -1 is the on-demand reference). INVARIANT, pinned by
+    # tests/test_allocation.py: sum(leg_cost.values()) == total_cost.
+    leg_cost: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
     def total_time(self) -> float:
@@ -53,11 +58,16 @@ class Breakdown:
     def total_cost(self) -> float:
         return sum(self.cost.values())
 
+    def add_leg_cost(self, market_id: int, dollars: float) -> None:
+        self.leg_cost[market_id] = self.leg_cost.get(market_id, 0.0) + dollars
+
     def add(self, other: "Breakdown") -> "Breakdown":
         for k in self.time:
             self.time[k] += other.time[k]
         for k in self.cost:
             self.cost[k] += other.cost[k]
+        for m, c in other.leg_cost.items():
+            self.add_leg_cost(m, c)
         self.revocations += other.revocations
         self.sessions += other.sessions
         self.wall_time += other.wall_time
@@ -66,12 +76,24 @@ class Breakdown:
 
 @dataclasses.dataclass
 class Session:
-    """One continuous occupancy of one instance: a list of (component,
-    duration) intervals billed against an hourly price function."""
+    """One continuous occupancy of one *allocation*: a list of (component,
+    duration) intervals billed against an hourly price function.
+
+    ``legs`` is the tuple of market ids billing concurrently — one entry
+    per allocation leg, each charged at its own spot price for the whole
+    session (legs run in lockstep; a leg is occupied for every wall hour
+    the job runs, whatever component that hour lands in). Defaults to the
+    single-market ``(market_id,)``, which bills identically to the
+    pre-allocation accounting."""
 
     market_id: int
     start_wall: float
     intervals: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    legs: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.legs is None:
+            self.legs = (self.market_id,)
 
     def add(self, component: str, hours: float) -> None:
         if hours > 0:
@@ -90,8 +112,12 @@ def bill_session(
     """Accrue a session into a breakdown with per-billing-cycle pricing.
 
     Each component interval is charged at the spot price in effect during
-    the wall-clock hour it runs in; the unused tail of the final billing
-    cycle is charged to ``billing_buffer``. Returns the wall time consumed.
+    the wall-clock hour it runs in — summed over the session's legs, each
+    leg at its own market's price — and the per-leg shares land in
+    ``Breakdown.leg_cost`` so allocation bills decompose exactly. The
+    unused tail of the final billing cycle (per leg: whole-hour billing is
+    per spot request) is charged to ``billing_buffer``. Returns the wall
+    time consumed.
     """
     t = session.start_wall
     for comp, dur in session.intervals:
@@ -99,15 +125,20 @@ def bill_session(
         while remaining > 1e-12:
             hour_idx = math.floor(t)
             step = min(remaining, (hour_idx + 1) - t)
-            price = price_of_hour(session.market_id, hour_idx)
             breakdown.time[comp] += step
-            breakdown.cost[comp] += step * price
+            for leg in session.legs:
+                leg_dollars = step * price_of_hour(leg, hour_idx)
+                breakdown.cost[comp] += leg_dollars
+                breakdown.add_leg_cost(leg, leg_dollars)
             t += step
             remaining -= step
     used = session.used_hours
     billed = math.ceil(max(used, 1e-9) / BILLING_CYCLE_HOURS) * BILLING_CYCLE_HOURS
     buffer_hours = billed - used
-    tail_price = price_of_hour(session.market_id, math.floor(t))
-    breakdown.cost["billing_buffer"] += buffer_hours * tail_price
+    tail_hour = math.floor(t)
+    for leg in session.legs:
+        leg_buffer = buffer_hours * price_of_hour(leg, tail_hour)
+        breakdown.cost["billing_buffer"] += leg_buffer
+        breakdown.add_leg_cost(leg, leg_buffer)
     breakdown.sessions += 1
     return used

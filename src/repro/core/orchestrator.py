@@ -49,6 +49,22 @@ subsequent pick; the report carries the measured per-shape rates
 (``shape_steps_per_hour``) and the first pick's expected
 ``cost_to_complete``.
 
+Allocation deviation (beyond the paper, ISSUE 4): the unit of
+provisioning is a multi-leg ``repro.core.allocation.Allocation``. A job
+whose footprint fits no single menu shape splits across up to
+``policy.max_legs`` markets: the legs form ONE mesh
+(``ElasticMeshManager.plan_for_allocation`` — contiguous per-leg device
+spans on the local pool), billed per leg at each market's own price
+(``Breakdown.leg_cost`` sums exactly to the total), running at the
+DCN-discounted combined throughput. A revocation of ONE leg is a PARTIAL
+reshard: the surviving legs keep their shards, the provisioner swaps only
+the lost leg for a same-shape low-correlation market
+(``_pick_allocation_siwoft(repair_of=...)``), and the bill is the lost
+leg's distinct state slices over DCN (``dist.meshplan.leg_state_bytes``)
+— strictly fewer bytes than the full restore a checkpoint baseline pays.
+Single-leg allocations reproduce the pre-allocation orchestrator
+bit-exactly.
+
 Revocations: siwoft/hybrid markets revoke when their future price trace
 crosses on-demand (mapped trace-hour → step index at the shape's step
 rate); the FT baseline gets the paper's fixed injected revocation count.
@@ -69,6 +85,7 @@ from repro.ckpt import CheckpointManager
 from repro.config.base import ShardingLayout, TrainConfig
 from repro.core import provisioner as alg
 from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.allocation import Allocation, Leg
 from repro.core.market import (
     THROUGHPUT_EFFICIENCY_CEIL,
     MarketSet,
@@ -81,6 +98,7 @@ from repro.dist.meshplan import (
     ElasticMeshManager,
     MeshPlan,
     ThroughputTracker,
+    leg_state_bytes,
     live_shardings,
     reshard_bytes,
     train_state_bytes,
@@ -114,6 +132,14 @@ class OrchestratorReport:
     # risk-adjusted), as opposed to that market's raw $/h
     shape_steps_per_hour: Dict[str, float] = dataclasses.field(default_factory=dict)
     cost_to_complete: float = 0.0
+    # multi-leg allocation accounting (beyond the paper): the leg tuple of
+    # every provisioned allocation (singletons for one-market picks), the
+    # per-market dollar split of cost_dollars (must sum to it — pinned by
+    # tests/test_allocation.py), and how many revocations were repaired by
+    # rebuilding ONE leg over DCN instead of a full re-provision
+    allocations_used: List[Tuple[int, ...]] = dataclasses.field(default_factory=list)
+    leg_costs: Dict[int, float] = dataclasses.field(default_factory=dict)
+    leg_repairs: int = 0
 
     @property
     def goodput(self) -> float:
@@ -140,6 +166,8 @@ class SpotTrainingOrchestrator:
         seed: int = 0,
         overheads: OverheadModel = OverheadModel(),
         mesh_manager: Optional[ElasticMeshManager] = None,
+        policy: Optional[SiwoftPolicy] = None,
+        job_memory_gb: Optional[float] = None,
     ):
         assert mode in ("siwoft", "checkpoint", "hybrid")
         self.model = model
@@ -166,6 +194,12 @@ class SpotTrainingOrchestrator:
             else None
         )
         self.ckpt_every = ckpt_every
+        self.policy = policy or SiwoftPolicy()
+        # planner-level footprint override (GB): lets a run exercise the
+        # multi-leg split path (a footprint larger than every menu shape)
+        # while the local device pool keeps simulating the execution — the
+        # reduced model's real bytes still drive the reshard accounting
+        self.job_memory_gb = job_memory_gb
         # one jitted step + state-sharding tree per distinct mesh plan
         self._steps: Dict[Tuple, Tuple[Any, Any]] = {}
         # measured steps/sec per mesh-plan key (EMA) + the analytic
@@ -180,8 +214,13 @@ class SpotTrainingOrchestrator:
         # provisioned shape with throughput θ delivers θ × steps_per_hour
         hours = total_steps / self.steps_per_hour
         # real footprint: fp32 params + both Adam moments, from the model's
-        # ParamSpec tree via the dist layer (was: hard-coded 16 GB)
-        mem_gb = train_state_bytes(self.model) / 2**30
+        # ParamSpec tree via the dist layer (was: hard-coded 16 GB) — unless
+        # the planner-level override stands in for a bigger production model
+        mem_gb = (
+            self.job_memory_gb
+            if self.job_memory_gb is not None
+            else train_state_bytes(self.model) / 2**30
+        )
         return Job(length_hours=hours, memory_gb=mem_gb, job_id=0)
 
     def _jitted_for(self, plan: MeshPlan):
@@ -227,16 +266,69 @@ class SpotTrainingOrchestrator:
     def _throughput_of(self, feats: alg.MarketFeatures, market: int) -> float:
         return max(float(feats.throughput[market]), 1e-9)
 
-    def _pick_market_siwoft(self, job: Job, feats, revoked: Set[int]) -> int:
+    def _pick_allocation_siwoft(
+        self,
+        job: Job,
+        feats,
+        revoked: Set[int],
+        repair_of: Optional[Tuple[Allocation, int]] = None,
+    ) -> Tuple[Allocation, bool]:
+        """Algorithm 1 over allocations; returns (allocation, is_repair).
+
+        ``repair_of = (interrupted_allocation, revoked_market)`` activates
+        the partial-reshard path: before a full re-provision, try to swap
+        ONLY the lost leg for a same-shape market that is low-correlated
+        with the revoked market AND with every surviving leg. A repair
+        keeps the mesh plan (and the live state's layout) intact, so the
+        only migration bytes are the lost leg's distinct slices over DCN —
+        strictly fewer than a full restore. When no repair admits, fall
+        back to the ordinary allocation pick."""
+        policy = self.policy
+        if repair_of is not None and repair_of[0].is_split:
+            prev, rev_market = repair_of
+            lost = next(l for l in prev.legs if l.market == rev_market)
+            surviving = tuple(m for m in prev.markets if m != rev_market)
+            W = alg.find_low_correlation(
+                feats, rev_market, policy, surviving=surviving
+            )
+            repairs = []
+            for w in sorted(W):
+                if w in revoked or w in prev.markets:
+                    continue
+                if int(feats.device_count[w]) != lost.device_count:
+                    continue  # same shape class: the mesh plan survives
+                cand = prev.replace_leg(rev_market, Leg(w, lost.device_count))
+                if alg.allocation_memory_gb(cand, feats) < job.memory_gb:
+                    continue
+                if alg.allocation_mttr(cand, feats) >= (
+                    policy.lifetime_factor
+                    * alg.allocation_wall_hours(job.length_hours, feats, cand)
+                ):
+                    repairs.append(cand)
+            if repairs:
+                repairs.sort(
+                    key=lambda a: (
+                        alg.allocation_expected_cost_to_complete(
+                            job.length_hours, feats, a
+                        ),
+                        a.markets,
+                    )
+                )
+                return repairs[0], True
         suitable = [
-            i for i in alg.find_suitable_servers(job, feats) if i not in revoked
+            a
+            for a in alg.find_suitable_allocations(job, feats, policy)
+            if not any(m in revoked for m in a.markets)
         ]
         if not suitable:
-            suitable = alg.find_suitable_servers(job, feats)
-        lifetimes = alg.compute_lifetime(feats, suitable)
-        policy = SiwoftPolicy()
+            suitable = alg.find_suitable_allocations(job, feats, policy)
+        if not suitable:
+            raise ValueError(
+                f"{job.memory_gb} GB fits no allocation of ≤{policy.max_legs} legs"
+            )
+        lifetimes = alg.compute_allocation_lifetimes(feats, suitable)
         S = alg.server_based_lifetime(job, lifetimes, policy, feats)
-        return alg.highest(S)
+        return alg.highest(S), False
 
     def _pick_market_random(self, job: Job, feats, revoked: Set[int], salt: int) -> int:
         cands = [
@@ -244,6 +336,11 @@ class SpotTrainingOrchestrator:
         ]
         if not cands:
             cands = alg.find_suitable_servers(job, feats)
+        if not cands:
+            raise ValueError(
+                f"FT baseline cannot provision {job.memory_gb} GB: no single "
+                "menu shape fits (splitting is a no-FT allocation mechanism)"
+            )
         rng = np.random.default_rng((self.seed, salt))
         return int(cands[rng.integers(len(cands))])
 
@@ -260,12 +357,29 @@ class SpotTrainingOrchestrator:
         rev_hour = h + int(np.argmax(tail))
         return from_step + max(int((rev_hour - wall) * rate), 0)
 
+    def _revocation_step_alloc(
+        self, alloc: Allocation, from_step: int, wall: float, rate: float
+    ) -> Tuple[Optional[int], Optional[int]]:
+        """Earliest trace revocation across the allocation's legs, mapped to
+        a global step index at the allocation's combined step rate; returns
+        (step, revoked leg's market). Any leg revocation interrupts the
+        whole allocation — the min-MTTR semantics the admission rule
+        priced. Leg order breaks exact hour ties deterministically."""
+        best_step: Optional[int] = None
+        best_market: Optional[int] = None
+        for m in alloc.markets:
+            s = self._revocation_step(m, from_step, wall, rate)
+            if s is not None and (best_step is None or s < best_step):
+                best_step, best_market = s, m
+        return best_step, best_market
+
     # ------------------------------------------------------------------
     def run(self, total_steps: int) -> OrchestratorReport:
         state = init_train_state(self.model, jax.random.key(self.tc.seed))
         job = self._segment_job(total_steps)
         revoked: Set[int] = set()
         markets: List[int] = []
+        allocations: List[Tuple[int, ...]] = []
         mesh_shapes: List[Tuple[int, int]] = []
         losses: List[float] = []
         bd = Breakdown()
@@ -273,8 +387,14 @@ class SpotTrainingOrchestrator:
         moved_total = 0
         restore_total = 0
         reshard_events = 0
+        leg_repairs = 0
         first_ecc = 0.0
         active_key = None  # plan.key the live state is laid out for
+        # a pending one-leg rebuild: (interrupted allocation, revoked
+        # market) + the lost leg's distinct-slice bytes, measured at
+        # revocation time and billed over DCN on the repaired session
+        pending_repair: Optional[Tuple[Allocation, int]] = None
+        pending_repair_bytes = 0
         step = 0
         wall = 0.0  # trace wall-clock hours; advances at the shape's rate
         t0 = time.perf_counter()
@@ -294,24 +414,70 @@ class SpotTrainingOrchestrator:
             feats = self._effective_feats()
             remaining = alg.remaining_job(job, (total_steps - step) / self.steps_per_hour)
             if self.mode in ("siwoft", "hybrid"):
-                market = self._pick_market_siwoft(remaining, feats, revoked)
-            else:
-                market = self._pick_market_random(remaining, feats, revoked, salt=len(markets))
-            if not markets:
-                first_ecc = alg.expected_cost_to_complete(
-                    job.length_hours, feats, market
+                alloc, is_repair = self._pick_allocation_siwoft(
+                    remaining, feats, revoked, repair_of=pending_repair
                 )
-            markets.append(market)
-            m = self.future.markets[market]
-            plan = self.meshman.plan_for(m.device_count)
+            else:
+                market = self._pick_market_random(
+                    remaining, feats, revoked, salt=len(allocations)
+                )
+                alloc = Allocation.single(
+                    market, self.future.markets[market].device_count
+                )
+                is_repair = False
+            if not allocations:
+                first_ecc = alg.allocation_expected_cost_to_complete(
+                    job.length_hours, feats, alloc
+                )
+            allocations.append(alloc.markets)
+            markets.extend(alloc.markets)
+            m = self.future.markets[alloc.legs[0].market]
+            plan = self.meshman.plan_for_allocation(alloc.device_counts)
             mesh_shapes.append(plan.mesh_shape)
             jitted, state_sh = self._jitted_for(plan)
-            # steps this market delivers per trace hour: reference rate × its
-            # shape's (calibrated) relative throughput
-            rate = self.steps_per_hour * self._throughput_of(feats, market)
+            # steps this allocation delivers per trace hour: reference rate ×
+            # the (calibrated) relative throughput — for splits, the
+            # DCN-discounted combined throughput over the union mesh
+            rate = self.steps_per_hour * max(
+                alg.allocation_throughput(alloc, feats), 1e-9
+            )
 
-            session = Session(market, wall)
+            session = Session(alloc.legs[0].market, wall, legs=alloc.markets)
             session.add("startup", self.ov.startup_hours)
+
+            if pending_repair is not None and active_key == plan.key:
+                prev_alloc, _ = pending_repair
+                if is_repair:
+                    # partial reshard: only the lost leg is rebuilt — its
+                    # distinct state slices cross the DCN once; surviving
+                    # legs keep their shards, the jitted step is reused
+                    moved = pending_repair_bytes
+                    leg_repairs += 1
+                else:
+                    # the ordinary pick replaced more than the lost leg
+                    # (no same-shape repair admitted): every leg span whose
+                    # market changed must be refilled over DCN — which is
+                    # why this always costs at least as much as a repair
+                    changed = [
+                        i
+                        for i in range(
+                            min(len(alloc.legs), len(prev_alloc.legs))
+                        )
+                        if alloc.markets[i] != prev_alloc.markets[i]
+                    ] + list(range(len(prev_alloc.legs), len(alloc.legs)))
+                    moved = sum(
+                        leg_state_bytes(state, state_sh, plan, i)
+                        for i in changed
+                        if i < len(plan.leg_spans)
+                    )
+                if moved:
+                    moved_total += moved
+                    reshard_events += 1
+                    session.add(
+                        "reshard",
+                        self.ov.reshard_hours(moved, alloc.dcn_gbps),
+                    )
+            pending_repair, pending_repair_bytes = None, 0
 
             # live cross-mesh migration: the state's current layout differs
             # from the provisioned market's mesh -> move it, price it
@@ -338,9 +504,10 @@ class SpotTrainingOrchestrator:
 
             if self.mode == "checkpoint":
                 rev_at = ft_rev_steps[revs] if revs < len(ft_rev_steps) else None
+                rev_market = alloc.legs[0].market if rev_at is not None else None
             else:
-                rev_at = self._revocation_step(
-                    market, step, wall + session.used_hours, rate
+                rev_at, rev_market = self._revocation_step_alloc(
+                    alloc, step, wall + session.used_hours, rate
                 )
 
             seg_start = step
@@ -370,8 +537,9 @@ class SpotTrainingOrchestrator:
             except Revoked as r:
                 done = max(r.last_step - seg_start + 1, 0)
                 revs += 1
-                revoked.add(market)
+                revoked.add(rev_market)
                 session.add("re_execution", done / rate)
+                handoff = False  # true when live state survives in memory
                 if self.mode == "checkpoint" and self.ckpt is not None:
                     self.ckpt.wait()
                     latest = self.ckpt.latest_step()
@@ -410,6 +578,7 @@ class SpotTrainingOrchestrator:
                         state = seg_state
                         step = seg_start
                         wasted += done
+                        handoff = True
                 else:
                     # P-SIWOFT: segment state survives via in-memory handoff
                     # (a live reshard onto the next market's mesh); steps
@@ -417,6 +586,17 @@ class SpotTrainingOrchestrator:
                     state = seg_state
                     step = seg_start
                     wasted += done
+                    handoff = True
+                if handoff and alloc.is_split:
+                    # one leg died, the rest of the mesh is alive: measure
+                    # the lost leg's distinct-slice bytes NOW (the layout
+                    # the survivors still hold) so the next pick can price
+                    # a partial rebuild over DCN — same in siwoft & hybrid
+                    leg_idx = alloc.markets.index(rev_market)
+                    pending_repair = (alloc, rev_market)
+                    pending_repair_bytes = leg_state_bytes(
+                        seg_state, state_sh, plan, leg_idx
+                    )
             wall += bill_session(
                 session, lambda m, h: self.future.spot_price(m, h), bd
             )
@@ -442,4 +622,7 @@ class SpotTrainingOrchestrator:
                 for k, sps in self.thr_tracker.measured.items()
             },
             cost_to_complete=first_ecc,
+            allocations_used=allocations,
+            leg_costs=dict(bd.leg_cost),
+            leg_repairs=leg_repairs,
         )

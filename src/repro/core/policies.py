@@ -24,6 +24,7 @@ Policies:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +91,15 @@ class SiwoftPolicy:
     correlation_threshold: float = 0.2  # "low revocation correlation" cut
     # beyond-paper hybrid: also checkpoint every `ckpt_interval_hours` (0=off)
     ckpt_interval_hours: float = 0.0
+    # beyond-paper multi-leg allocations (core/allocation.py): a job whose
+    # footprint fits no single menu shape splits across up to `max_legs`
+    # spot markets (multi-leg mesh over DCN). `split_margin=None` keeps the
+    # split search strictly as a fallback — single-market behavior is then
+    # bit-identical to the pre-allocation provisioner; a float in (0, 1)
+    # also admits opportunistic splits whose expected cost-to-complete
+    # beats the best single shape by at least that fraction.
+    max_legs: int = 2
+    split_margin: Optional[float] = None
 
     @property
     def uses_checkpoints(self) -> bool:

@@ -31,6 +31,19 @@ and Algorithm 1's MTTR ordering chooses among them; a revocation can
 re-provision onto a *different* shape, which the orchestrator handles as
 a live cross-mesh reshard.
 
+Allocation deviation (beyond the paper, ISSUE 4): the unit Algorithm 1
+ranks and provisions is a multi-leg :class:`repro.core.allocation.
+Allocation`, not a bare market index. When some single shape fits the job
+the candidate set is exactly the paper's (single-leg allocations, same
+order — bit-identical to the pre-allocation provisioner); when NONE fits,
+:func:`find_suitable_allocations` searches splits of the job across up to
+``policy.max_legs`` low-correlation markets, priced with the combined
+DCN-discounted throughput and the min-over-legs MTTR (admission is
+strictly harder for wider splits). After a revocation of one leg,
+:func:`find_low_correlation` / :func:`restrict_after_revocation` filter
+against the revoked market AND every surviving leg, keeping one-leg
+repairs eligible.
+
 Throughput deviation (beyond the paper): every shape carries a relative
 throughput (``market.shape_throughput`` — sublinear in device count,
 mildly increasing in interconnect, ``1.0`` for the 1-device reference),
@@ -48,12 +61,18 @@ price-vs-MTTR behavior.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
+from repro.core.allocation import Allocation, Leg, combined_throughput
 from repro.core.market import MarketSet, revocation_probability
 from repro.core.policies import Job, SiwoftPolicy, work_to_wall_hours
+
+# Algorithm-1 candidates are Allocations since the multi-leg refactor; the
+# int form survives for the per-market primitives the FT baselines and the
+# feature layer still speak.
+Candidate = Union[int, Allocation]
 
 
 @dataclasses.dataclass
@@ -142,6 +161,75 @@ def expected_cost_to_complete(
     return cost_to_complete(work_hours, feats, market) / (1.0 - v)
 
 
+# --- allocation-level composition (multi-leg meshes over DCN) ---------------
+#
+# Single-leg allocations DELEGATE to the per-market functions above, so a
+# one-market allocation prices, admits, and ranks bit-identically to the
+# bare market index it replaced (the PR 3 legacy-equivalence guarantee).
+
+def allocation_throughput(alloc: Allocation, feats: MarketFeatures) -> float:
+    """Relative steps/hour of an allocation. One leg: the market's own
+    (possibly measured/calibrated) throughput. Multi-leg: the analytic
+    sublinear law over the union device count at the DCN-capped effective
+    bandwidth — never better than the same devices on one interconnect."""
+    if len(alloc) == 1:
+        return float(feats.throughput[alloc.legs[0].market])
+    return combined_throughput(
+        alloc.device_counts,
+        [float(feats.interconnect_gbps[m]) for m in alloc.markets],
+        alloc.dcn_gbps,
+    )
+
+
+def allocation_mttr(alloc: Allocation, feats: MarketFeatures) -> float:
+    """Any leg revocation interrupts the job: MTTR composes as the MIN over
+    legs — the honest survival model, which makes the Alg. 1 admission rule
+    strictly harder for wider splits."""
+    return min(float(feats.mttr[m]) for m in alloc.markets)
+
+
+def allocation_price(alloc: Allocation, feats: MarketFeatures) -> float:
+    """Hourly price of the whole allocation: legs bill independently."""
+    return float(sum(float(feats.avg_price[m]) for m in alloc.markets))
+
+
+def allocation_memory_gb(alloc: Allocation, feats: MarketFeatures) -> float:
+    """Aggregate memory across legs — what the job's sharded state (now
+    spread over the union mesh) must fit into."""
+    return float(sum(float(feats.total_memory_gb[m]) for m in alloc.markets))
+
+
+def allocation_wall_hours(
+    work_hours: float, feats: MarketFeatures, alloc: Allocation
+) -> float:
+    if len(alloc) == 1:
+        return wall_hours(work_hours, feats, alloc.legs[0].market)
+    return work_to_wall_hours(work_hours, allocation_throughput(alloc, feats))
+
+
+def allocation_cost_to_complete(
+    work_hours: float, feats: MarketFeatures, alloc: Allocation
+) -> float:
+    if len(alloc) == 1:
+        return cost_to_complete(work_hours, feats, alloc.legs[0].market)
+    return allocation_price(alloc, feats) * allocation_wall_hours(
+        work_hours, feats, alloc
+    )
+
+
+def allocation_expected_cost_to_complete(
+    work_hours: float, feats: MarketFeatures, alloc: Allocation
+) -> float:
+    """Risk-adjusted cost-to-complete of an allocation: same restart
+    expectation as the per-market rule, with wall time at the combined
+    throughput and revocation risk against the min-over-legs MTTR."""
+    if len(alloc) == 1:
+        return expected_cost_to_complete(work_hours, feats, alloc.legs[0].market)
+    wall = allocation_wall_hours(work_hours, feats, alloc)
+    v = min(wall / max(allocation_mttr(alloc, feats), 1e-9), MAX_REVOCATION_RISK)
+    return allocation_cost_to_complete(work_hours, feats, alloc) / (1.0 - v)
+
+
 # --- Alg. 1 steps -----------------------------------------------------------
 
 def find_suitable_servers(
@@ -177,17 +265,133 @@ def find_suitable_servers(
     )
 
 
+def find_suitable_allocations(
+    job: Job,
+    feats: MarketFeatures,
+    policy: Optional[SiwoftPolicy] = None,
+    *,
+    max_overshoot: float = 4.0,
+    max_legs: Optional[int] = None,
+    split_margin: Optional[float] = None,
+    exclude: Set[int] = frozenset(),
+) -> List[Allocation]:
+    """Step 2, allocation-first: the candidate set Algorithm 1 ranks.
+
+    Single-leg allocations wrap :func:`find_suitable_servers` one-for-one
+    (same markets, same expected-cost order), so when any single shape fits
+    and splits are not opportunistically enabled the candidate set is the
+    paper's — bit-identical ordering to the pre-allocation provisioner.
+
+    The SPLIT-SEARCH path activates when
+    * no single shape fits the job (the case the paper cannot provision
+      without fault tolerance), or
+    * ``split_margin`` is set (policy knob ``SiwoftPolicy.split_margin``)
+      and some split's expected cost-to-complete beats the best single
+      shape by at least that fraction.
+
+    Splits are pairs-to-``max_legs``-tuples of distinct markets whose
+    combined memory fits the job; legs whose pairwise co-revocation exceeds
+    the policy's correlation threshold are skipped when a policy is given
+    (a split correlated with itself revokes as one market but pays DCN
+    prices — strictly dominated). Ranking is by allocation expected
+    cost-to-complete; the honest min-MTTR survival model and the
+    DCN-discounted throughput are both priced in, so the search only
+    surfaces splits that genuinely earn their coupling cost.
+    """
+    if policy is not None:
+        max_legs = policy.max_legs if max_legs is None else max_legs
+        split_margin = (
+            policy.split_margin if split_margin is None else split_margin
+        )
+    max_legs = 2 if max_legs is None else max(int(max_legs), 1)
+
+    singles = [
+        Allocation.single(i, int(feats.device_count[i]))
+        for i in find_suitable_servers(job, feats, max_overshoot=max_overshoot)
+        if i not in exclude
+    ]
+    if singles and split_margin is None:
+        return singles
+    if max_legs < 2:
+        return singles
+
+    corr_cut = policy.correlation_threshold if policy is not None else 1.0
+    totals = feats.total_memory_gb
+    n = len(totals)
+    pool = [i for i in range(n) if i not in exclude]
+    # widest shapes first: a split wants the fewest, biggest legs
+    pool.sort(key=lambda i: (-float(totals[i]), i))
+
+    splits: List[Allocation] = []
+
+    def grow(legs: List[int], mem: float, start: int) -> None:
+        if len(legs) >= 2 and mem >= job.memory_gb:
+            splits.append(
+                Allocation.of(legs, [int(feats.device_count[m]) for m in legs])
+            )
+            return  # a fitting split never benefits from MORE legs (min-MTTR)
+        if len(legs) >= max_legs:
+            return
+        for k in range(start, len(pool)):
+            j = pool[k]
+            if any(float(feats.corr[j, m]) >= corr_cut for m in legs):
+                continue
+            grow(legs + [j], mem + float(totals[j]), k + 1)
+
+    grow([], 0.0, 0)
+    if not splits and corr_cut < 1.0:
+        # correlation filter emptied the split set: refill without it (same
+        # fallback discipline as Alg. 1's step-13 refill)
+        corr_cut = 1.0
+        grow([], 0.0, 0)
+
+    splits.sort(
+        key=lambda a: (
+            allocation_expected_cost_to_complete(job.length_hours, feats, a),
+            a.markets,
+        )
+    )
+    if not singles:
+        return splits
+    best_single = allocation_expected_cost_to_complete(
+        job.length_hours, feats, singles[0]
+    )
+    margin = float(split_margin or 0.0)
+    good_splits = [
+        a
+        for a in splits
+        if allocation_expected_cost_to_complete(job.length_hours, feats, a)
+        < best_single * (1.0 - margin)
+    ]
+    merged = singles + good_splits
+    merged.sort(
+        key=lambda a: (
+            allocation_expected_cost_to_complete(job.length_hours, feats, a),
+            a.markets,
+        )
+    )
+    return merged
+
+
 def compute_lifetime(feats: MarketFeatures, suitable: Sequence[int]) -> Dict[int, float]:
     """Step 3: lifetime (MTTR) per suitable market."""
     return {i: float(feats.mttr[i]) for i in suitable}
 
 
+def compute_allocation_lifetimes(
+    feats: MarketFeatures, suitable: Sequence[Allocation]
+) -> Dict[Allocation, float]:
+    """Step 3 over allocations: lifetime = min over legs (any leg revocation
+    interrupts the job)."""
+    return {a: allocation_mttr(a, feats) for a in suitable}
+
+
 def server_based_lifetime(
     job: Job,
-    lifetimes: Dict[int, float],
+    lifetimes: Dict[Candidate, float],
     policy: SiwoftPolicy,
     feats: Optional[MarketFeatures] = None,
-) -> List[int]:
+) -> List[Candidate]:
     """Step 5: keep markets whose lifetime admits the job (MTTR ≥ 2 × the
     job's *wall time on that shape*), sorted by lifetime descending. Ties
     (e.g. several never-revoking markets, or markets sharing a revocation
@@ -203,20 +407,41 @@ def server_based_lifetime(
         if lt >= policy.lifetime_factor * _wall(job, feats, i)
     ]
     pool = admitted if admitted else list(lifetimes)
-    return sorted(pool, key=lambda i: (-lifetimes[i], _ecc(job, feats, i), i))
+    return sorted(
+        pool, key=lambda i: (-lifetimes[i], _ecc(job, feats, i), _stable(i))
+    )
 
 
-def _wall(job: Job, feats: Optional[MarketFeatures], i: int) -> float:
-    """Job wall time on market ``i`` (== length when features are absent)."""
-    return wall_hours(job.length_hours, feats, i) if feats is not None else job.length_hours
+def _stable(c: Candidate):
+    """Deterministic final sort key: the market index, or the allocation's
+    market tuple (for single-leg allocations that orders exactly like the
+    bare index did)."""
+    return c.markets if isinstance(c, Allocation) else c
 
 
-def _ecc(job: Job, feats: Optional[MarketFeatures], i: int) -> float:
+def _markets(c: Candidate) -> Tuple[int, ...]:
+    return c.markets if isinstance(c, Allocation) else (c,)
+
+
+def _wall(job: Job, feats: Optional[MarketFeatures], c: Candidate) -> float:
+    """Job wall time on candidate ``c`` (== length when features are absent)."""
+    if feats is None:
+        return job.length_hours
+    if isinstance(c, Allocation):
+        return allocation_wall_hours(job.length_hours, feats, c)
+    return wall_hours(job.length_hours, feats, c)
+
+
+def _ecc(job: Job, feats: Optional[MarketFeatures], c: Candidate) -> float:
     """Tie-break key: expected cost-to-complete (0 when features absent)."""
-    return expected_cost_to_complete(job.length_hours, feats, i) if feats is not None else 0.0
+    if feats is None:
+        return 0.0
+    if isinstance(c, Allocation):
+        return allocation_expected_cost_to_complete(job.length_hours, feats, c)
+    return expected_cost_to_complete(job.length_hours, feats, c)
 
 
-def highest(S: Sequence[int]) -> int:
+def highest(S: Sequence[Candidate]) -> Candidate:
     """Step 7: S is kept lifetime-descending; the head is the highest."""
     return S[0]
 
@@ -231,37 +456,73 @@ def lifetime_admits(
 
 
 def find_low_correlation(
-    feats: MarketFeatures, revoked_market: int, policy: SiwoftPolicy
+    feats: MarketFeatures,
+    revoked_market: int,
+    policy: SiwoftPolicy,
+    surviving: Sequence[int] = (),
 ) -> Set[int]:
-    """Step 13: markets whose co-revocation with the revoked market over the
-    3-month history is below the threshold."""
+    """Step 13, allocation-aware: markets whose co-revocation with the
+    revoked market — AND with every surviving leg of the interrupted
+    allocation — over the 3-month history is below the threshold. A
+    replacement leg correlated with a leg the job still holds would turn
+    the next zone shock into a double revocation, which is exactly what the
+    filter exists to prevent; with no surviving legs (the single-market
+    case) this is the paper's step 13 unchanged."""
     corr = feats.corr[revoked_market]
-    return {i for i in range(corr.shape[0]) if corr[i] < policy.correlation_threshold}
+    out = {i for i in range(corr.shape[0]) if corr[i] < policy.correlation_threshold}
+    for s in surviving:
+        out &= {
+            i
+            for i in range(corr.shape[0])
+            if feats.corr[s, i] < policy.correlation_threshold
+        }
+    return out
 
 
 def restrict_after_revocation(
-    S: List[int],
-    revoked: int,
+    S: List[Candidate],
+    revoked: Candidate,
     W: Set[int],
-    lifetimes: Dict[int, float],
+    lifetimes: Dict[Candidate, float],
     already_revoked: Set[int],
     feats: Optional[MarketFeatures] = None,
     job: Optional[Job] = None,
-) -> List[int]:
+    surviving: Sequence[int] = (),
+) -> List[Candidate]:
     """Step 14 (+ fallback): S ← (S \\ {s}) ∩ W, lifetime-descending with
     the expected-cost-to-complete tie-break (pass ``job`` + ``feats`` to
     enable it; ``job`` carries the remaining work the cost is integrated
-    over)."""
-    rest = [i for i in S if i != revoked and i in W]
+    over).
+
+    Allocation-aware: a candidate survives the restriction only when EVERY
+    leg market is in W or among the interrupted allocation's surviving legs
+    (a repair that keeps live legs must stay eligible even though a leg is
+    trivially correlated with itself). The revoked market itself is never
+    in W (self-correlation is 1), so any candidate touching it drops out.
+    For single-leg candidates this reduces to the pre-allocation rule
+    ``i != revoked and i in W`` exactly."""
+    keep = W | set(surviving)
+    rest = [
+        c for c in S if c != revoked and all(m in keep for m in _markets(c))
+    ]
     if not rest:
-        rest = [i for i in lifetimes if i not in already_revoked and i != revoked]
+        rest = [
+            c
+            for c in lifetimes
+            if c != revoked
+            and not any(m in already_revoked for m in _markets(c))
+        ]
     if job is not None:
-        tiebreak = lambda i: _ecc(job, feats, i)
+        tiebreak = lambda c: _ecc(job, feats, c)
     elif feats is not None:
-        tiebreak = lambda i: float(feats.avg_price[i])
+        tiebreak = lambda c: (
+            allocation_price(c, feats)
+            if isinstance(c, Allocation)
+            else float(feats.avg_price[c])
+        )
     else:
-        tiebreak = lambda i: 0.0
-    return sorted(rest, key=lambda i: (-lifetimes[i], tiebreak(i), i))
+        tiebreak = lambda c: 0.0
+    return sorted(rest, key=lambda c: (-lifetimes[c], tiebreak(c), _stable(c)))
 
 
 def remaining_job(job: Job, remaining_work_hours: float) -> Job:
@@ -272,8 +533,17 @@ def remaining_job(job: Job, remaining_work_hours: float) -> Job:
     )
 
 
-def plan_first_choice(job: Job, feats: MarketFeatures, policy: SiwoftPolicy) -> int:
-    """Convenience: the market Alg. 1 provisions first for this job."""
-    suitable = find_suitable_servers(job, feats)
-    lifetimes = compute_lifetime(feats, suitable)
+def plan_first_choice(
+    job: Job, feats: MarketFeatures, policy: SiwoftPolicy
+) -> Allocation:
+    """Convenience: the allocation Alg. 1 provisions first for this job —
+    a single-leg allocation whenever one shape fits (the paper's case), a
+    multi-leg split when none does (or when ``policy.split_margin`` lets a
+    sufficiently cheaper split win)."""
+    suitable = find_suitable_allocations(job, feats, policy)
+    if not suitable:
+        raise ValueError(
+            f"no allocation (≤{policy.max_legs} legs) fits {job.memory_gb} GB"
+        )
+    lifetimes = compute_allocation_lifetimes(feats, suitable)
     return highest(server_based_lifetime(job, lifetimes, policy, feats))

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import provisioner as alg
 from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.allocation import Allocation
 from repro.core.market import MarketSet
 from repro.core.policies import (
     CheckpointPolicy,
@@ -115,6 +116,20 @@ class Simulator:
             return None
         return float(h0 + idx)
 
+    def _next_allocation_revocation(
+        self, alloc: Allocation, wall: float
+    ) -> Tuple[Optional[float], Optional[int]]:
+        """Earliest trace revocation across the allocation's legs: (hour,
+        revoked leg's market). Any leg revocation interrupts the job —
+        the min-composition the allocation MTTR prices a priori. Leg order
+        breaks exact ties (deterministic)."""
+        best: Tuple[Optional[float], Optional[int]] = (None, None)
+        for m in alloc.markets:
+            t = self._next_trace_revocation(m, wall)
+            if t is not None and (best[0] is None or t < best[0]):
+                best = (t, m)
+        return best
+
     def _ft_revocation_points(self, job: Job, n: int, salt: int) -> List[float]:
         rng = np.random.default_rng(
             np.random.SeedSequence(entropy=self.seed, spawn_key=(job.job_id, salt))
@@ -161,11 +176,22 @@ class Simulator:
     # --- P-SIWOFT ------------------------------------------------------
     def _run_siwoft(self, job: Job, policy: SiwoftPolicy, start_wall: float) -> Breakdown:
         """Progress is tracked in WORK hours (reference-shape compute); the
-        provisioned market's shape converts work ↔ wall at its throughput
-        θ, so a faster shape bills fewer wall hours for the same job."""
+        provisioned allocation converts work ↔ wall at its (combined)
+        throughput θ, so a faster shape bills fewer wall hours for the same
+        job. Candidates are allocations: single-leg whenever one menu shape
+        fits (the paper's case, bit-identical to the pre-allocation
+        simulator), multi-leg splits over DCN when none does. A revocation
+        of ONE leg interrupts the whole attempt (min-MTTR semantics); the
+        restriction step then excludes markets correlated with the revoked
+        leg or with any surviving leg."""
         bd = Breakdown()
-        suitable = alg.find_suitable_servers(job, self.feats)          # step 2
-        lifetimes = alg.compute_lifetime(self.feats, suitable)         # step 3
+        suitable = alg.find_suitable_allocations(job, self.feats, policy)  # step 2
+        if not suitable:
+            raise ValueError(
+                f"job {job.job_id}: {job.memory_gb} GB fits no allocation of "
+                f"≤{policy.max_legs} legs — widen max_legs or the menu"
+            )
+        lifetimes = alg.compute_allocation_lifetimes(self.feats, suitable)  # step 3
         S = alg.server_based_lifetime(job, lifetimes, policy, self.feats)  # step 5
         wall = start_wall
         max_progress = 0.0
@@ -173,18 +199,18 @@ class Simulator:
         revoked: Set[int] = set()
 
         for _ in range(MAX_ATTEMPTS):                                  # step 6
-            s = alg.highest(S)                                         # step 7
-            thr = self._throughput(s)
+            a = alg.highest(S)                                         # step 7
+            thr = max(alg.allocation_throughput(a, self.feats), 1e-9)
             # step 9's revocation-probability estimate (wall / MTTR) is
             # folded into the expected-cost-to-complete ranking that
             # ordered S — see alg.expected_cost_to_complete
-            session = Session(s, wall)
+            session = Session(a.legs[0].market, wall, legs=a.markets)
             session.add("startup", self.ov.startup_hours)              # provision (step 10)
             resume_from = last_ckpt if policy.uses_checkpoints else 0.0
             if policy.uses_checkpoints and resume_from > 0:
                 session.add("recovery", self.ov.restore_hours(job.memory_gb))
 
-            t_rev = self._next_trace_revocation(s, wall)               # step 11 driver
+            t_rev, rev_market = self._next_allocation_revocation(a, wall)  # step 11 driver
             compute_start = wall + session.used_hours
             progress = resume_from
 
@@ -230,10 +256,15 @@ class Simulator:
             wall += wall_used
             if progress >= job.length_hours:                            # step 18
                 return bd
-            # revocation (steps 11–15): lose everything since last_ckpt
+            # revocation (steps 11–15): lose everything since last_ckpt.
+            # Only ONE leg's market revoked; the whole attempt is
+            # interrupted, but surviving legs stay eligible for repairs.
             bd.revocations += 1
-            revoked.add(s)
-            W = alg.find_low_correlation(self.feats, s, policy)         # step 13
+            revoked.add(rev_market)
+            surviving_legs = tuple(m for m in a.markets if m != rev_market)
+            W = alg.find_low_correlation(
+                self.feats, rev_market, policy, surviving=surviving_legs
+            )                                                          # step 13
             # re-rank for the REMAINING work: the cost-to-complete tie-break
             # integrates price/throughput over what is left — for hybrid,
             # everything past the newest checkpoint (last_ckpt may have
@@ -241,7 +272,8 @@ class Simulator:
             surviving = last_ckpt if policy.uses_checkpoints else 0.0
             rem = alg.remaining_job(job, job.length_hours - surviving)
             S = alg.restrict_after_revocation(
-                S, s, W, lifetimes, revoked, self.feats, job=rem
+                S, a, W, lifetimes, revoked, self.feats, job=rem,
+                surviving=surviving_legs,
             )                                                          # step 14
             wall = max(wall, 0.0 if t_rev is None else t_rev)
         raise RuntimeError("siwoft: exceeded MAX_ATTEMPTS")

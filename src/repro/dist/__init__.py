@@ -23,6 +23,7 @@ from repro.dist.elastic import replicate, reshard_params, reshard_tree
 from repro.dist.meshplan import (
     ElasticMeshManager,
     MeshPlan,
+    leg_state_bytes,
     live_shardings,
     mesh_shape_for,
     reshard_bytes,
@@ -44,6 +45,7 @@ __all__ = [
     "MeshPlan",
     "PARAM_RULES",
     "batch_shardings",
+    "leg_state_bytes",
     "live_shardings",
     "mesh_shape_for",
     "reshard_bytes",

@@ -44,17 +44,32 @@ def mesh_shape_for(n_devices: int) -> Tuple[int, int]:
 
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
-    """One menu shape made concrete on the local device pool."""
+    """One menu shape — or one multi-leg allocation — made concrete on the
+    local device pool. ``leg_spans`` maps each allocation leg to its
+    contiguous range of (honored) device indices in
+    ``mesh.devices.flatten()``; single-market plans have one span covering
+    the whole mesh."""
 
     requested_devices: int          # the menu's device_count
     device_count: int               # honored (capped to the local pool)
     mesh_shape: Tuple[int, int]     # (data, model)
     axes: Tuple[str, str]
     mesh: Any                       # jax.sharding.Mesh
+    leg_spans: Tuple[Tuple[int, int], ...] = ()
+
+    def __post_init__(self):
+        if not self.leg_spans:
+            object.__setattr__(self, "leg_spans", ((0, self.device_count),))
 
     @property
     def key(self) -> Tuple[int, Tuple[int, int]]:
-        """Identity of the *execution* substrate (honored count + shape)."""
+        """Identity of the *execution* substrate (honored count + shape).
+
+        Deliberately leg-blind: a 4+4 split and a single 8-device market
+        compile to the SAME mesh, so re-provisioning between them reuses
+        the jitted step and moves zero bytes of layout — only the
+        DCN-crossing leg bytes (``leg_state_bytes``) differ, and those are
+        billed by the orchestrator, not the compiler."""
         return (self.device_count, self.mesh_shape)
 
 
@@ -70,6 +85,7 @@ class ElasticMeshManager:
     def __init__(self, devices: Optional[Sequence[Any]] = None):
         self.devices: List[Any] = list(devices if devices is not None else jax.devices())
         self._plans: Dict[int, MeshPlan] = {}
+        self._alloc_plans: Dict[Tuple[int, ...], MeshPlan] = {}
 
     @classmethod
     def from_mesh(cls, mesh) -> "ElasticMeshManager":
@@ -90,6 +106,57 @@ class ElasticMeshManager:
                 mesh=mesh,
             )
             self._plans[n] = plan
+        return plan
+
+    def plan_for_allocation(self, device_counts: Sequence[int]) -> MeshPlan:
+        """One mesh spanning every leg of a multi-leg allocation.
+
+        The union mesh is built over the summed device count (capped to the
+        local pool — the pool *simulates* the federated instances) with
+        contiguous per-leg device spans recorded in ``leg_spans``; honored
+        leg sizes are the proportional split of the capped total, so an
+        (8, 8) allocation on an 8-device pool simulates as (4, 4). A
+        single-leg allocation delegates to :meth:`plan_for` — the identical
+        cached plan object the pre-allocation orchestrator used. When the
+        pool has fewer devices than the allocation has legs, trailing legs
+        collapse to empty spans (a 1-device pool cannot represent a split;
+        byte accounting then degenerates to zero for those legs)."""
+        counts = [max(int(c), 1) for c in device_counts]
+        if len(counts) == 1:
+            return self.plan_for(counts[0])
+        total = sum(counts)
+        honored_total = max(1, min(total, len(self.devices)))
+        # proportional, deterministic rounding: floor shares, then hand the
+        # remainder to the widest legs first (ties: leg order)
+        shares = [honored_total * c // total for c in counts]
+        rest = honored_total - sum(shares)
+        order = sorted(range(len(counts)), key=lambda i: (-counts[i], i))
+        for i in order:
+            if rest <= 0:
+                break
+            shares[i] += 1
+            rest -= 1
+        key = tuple(shares)
+        plan = self._alloc_plans.get(key)
+        if plan is None:
+            shape = mesh_shape_for(honored_total)
+            devs = np.asarray(
+                self.devices[:honored_total], dtype=object
+            ).reshape(shape)
+            mesh = jax.sharding.Mesh(devs, ("data", "model"))
+            spans, lo = [], 0
+            for s in shares:
+                spans.append((lo, lo + s))
+                lo += s
+            plan = MeshPlan(
+                requested_devices=int(total),
+                device_count=honored_total,
+                mesh_shape=shape,
+                axes=("data", "model"),
+                mesh=mesh,
+                leg_spans=tuple(spans),
+            )
+            self._alloc_plans[key] = plan
         return plan
 
 
@@ -210,6 +277,43 @@ def reshard_bytes(tree: Any, old_shardings: Any, new_shardings: Any) -> int:
     assert len(leaves) == len(old_leaves) == len(new_leaves)
     for leaf, old, new in zip(leaves, old_leaves, new_leaves):
         total += _leaf_moved_bytes(leaf, old, new)
+    return int(total)
+
+
+def leg_state_bytes(tree: Any, shardings: Any, plan: MeshPlan, leg_index: int) -> int:
+    """Bytes that must cross the DCN to rebuild ONE lost allocation leg.
+
+    When a leg of a multi-leg allocation is revoked, the surviving legs
+    still hold their shards; only the replacement leg starts empty. What
+    crosses the DCN is the set of DISTINCT array slices the new leg's
+    devices hold under ``shardings`` — each distinct slice is sent once
+    and fanned out over the leg's own interconnect, so intra-leg replicas
+    don't re-cross the wide-area link. Compare: a full checkpoint restore
+    pulls :func:`tree_bytes` (every leaf in full) through remote storage,
+    and a full cross-mesh reshard re-materializes every device. For any
+    layout that shards state across the data axis (FSDP/ZeRO), a leg's
+    distinct-slice volume is a strict fraction of the full state — the
+    byte-level sense in which a one-leg revocation is cheaper than losing
+    the whole allocation.
+    """
+    lo, hi = plan.leg_spans[leg_index]
+    flat = np.asarray(plan.mesh.devices, dtype=object).flatten()
+    leg_devices = {id(d): d for d in flat[lo:hi]}
+    total = 0
+    leaves = jax.tree_util.tree_leaves(tree)
+    sh_leaves = jax.tree_util.tree_leaves(shardings)
+    assert len(leaves) == len(sh_leaves)
+    for leaf, sh in zip(leaves, sh_leaves):
+        shape = tuple(leaf.shape)
+        itemsize = np.dtype(leaf.dtype).itemsize
+        seen = set()
+        for dev, idx in sh.devices_indices_map(shape).items():
+            if id(dev) not in leg_devices:
+                continue
+            norm = _norm_index(idx, shape)
+            if norm not in seen:
+                seen.add(norm)
+                total += _volume(norm) * itemsize
     return int(total)
 
 

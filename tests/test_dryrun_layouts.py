@@ -1,0 +1,87 @@
+"""Layout-sweep answer to the ROADMAP question "do fsdp_heavy / moe_tp
+beat baseline on collective bytes?" — asserted against the committed
+``results/dryrun`` artifacts from ``launch/dryrun.py --cell ... --layout``.
+
+The measured answer (pinned here so it stays true as the sharding layer
+evolves) is NUANCED, not the hoped-for clean win:
+
+* ``fsdp_heavy`` on qwen3-4b train_4k: a marginal collective-bytes WIN
+  over baseline (joint (data, model) sharding of vocab/ffn removes a
+  sliver of gradient all-reduce wire).
+* ``fsdp_heavy`` on gemma-7b train_4k: a clear REGRESSION — gemma's wide
+  256k vocab sharded jointly forces re-gathers that cost ~43 % more wire
+  and a ~6× peak-memory blowup. fsdp_heavy is a memory/bytes trade, not a
+  free lunch, and baseline (which already FSDP-shards the embed dim) is
+  the right default.
+* ``moe_tp`` on mixtral-8x7b: EXACTLY baseline — mixtral's 8 experts
+  don't divide the 16-wide model axis, so baseline's expert-parallel rule
+  already falls back to replication and both rule sets resolve to the
+  same PartitionSpecs (the divisibility discipline of
+  ``dist/sharding.py`` at work).
+* ``moe_tp`` on phi3.5-moe (16 experts — divisible): slightly MORE wire
+  than baseline; tensor-parallel experts pay all-reduce on every expert
+  ffn where expert parallelism paid all-to-all on a thinner buffer.
+"""
+import json
+import pathlib
+
+import pytest
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _load(arch: str, layout: str, shape: str = "train_4k", mesh: str = "16x16"):
+    p = RESULTS / f"{arch}__{shape}__{mesh}__{layout}.json"
+    if not p.exists():
+        pytest.skip(f"missing dryrun artifact {p.name} (run the layout sweep)")
+    return json.loads(p.read_text())
+
+
+@pytest.mark.parametrize("arch,layout", [
+    ("qwen3-4b", "fsdp_heavy"),
+    ("gemma-7b", "fsdp_heavy"),
+    ("mixtral-8x7b", "moe_tp"),
+    ("phi3.5-moe-42b-a6.6b", "moe_tp"),
+])
+def test_layout_sweep_artifacts_are_complete(arch, layout):
+    base = _load(arch, "baseline")
+    alt = _load(arch, layout)
+    for r in (base, alt):
+        assert r["flops"] > 0 and r["collective_wire_bytes"] > 0
+
+
+def test_fsdp_heavy_beats_baseline_on_qwen_collective_bytes():
+    base = _load("qwen3-4b", "baseline")
+    alt = _load("qwen3-4b", "fsdp_heavy")
+    assert alt["collective_wire_bytes"] <= base["collective_wire_bytes"]
+
+
+def test_fsdp_heavy_regresses_on_gemma_wide_vocab():
+    """The negative result, pinned: joint vocab sharding on a 256k-vocab
+    model costs MORE wire, much more memory, and even extra FLOPs (XLA
+    re-materializes around the joint-sharded unembed). Baseline — which
+    already FSDP-shards the embed dim — stays the default."""
+    base = _load("gemma-7b", "baseline")
+    alt = _load("gemma-7b", "fsdp_heavy")
+    assert alt["collective_wire_bytes"] > base["collective_wire_bytes"]
+    assert alt["peak_bytes_per_device"] > 2 * base["peak_bytes_per_device"]
+    assert alt["flops"] > 1.2 * base["flops"]
+
+
+def test_moe_tp_is_noop_when_experts_dont_divide_model_axis():
+    """mixtral: 8 experts % 16 model shards != 0 — both rule sets resolve
+    identically, byte for byte."""
+    base = _load("mixtral-8x7b", "baseline")
+    alt = _load("mixtral-8x7b", "moe_tp")
+    assert alt["collective_wire_bytes"] == base["collective_wire_bytes"]
+    assert alt["hbm_bytes"] == base["hbm_bytes"]
+
+
+def test_moe_tp_costs_wire_when_experts_do_divide():
+    """phi3.5-moe (16 experts, divisible): tensor-parallel experts trade
+    all-to-all for all-reduce and pay ~2 % more wire — expert parallelism
+    keeps the default slot."""
+    base = _load("phi3.5-moe-42b-a6.6b", "baseline")
+    alt = _load("phi3.5-moe-42b-a6.6b", "moe_tp")
+    assert alt["collective_wire_bytes"] >= base["collective_wire_bytes"]
+    assert alt["collective_wire_bytes"] <= 1.10 * base["collective_wire_bytes"]

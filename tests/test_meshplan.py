@@ -113,6 +113,31 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent(
     assert 0 < moved <= full, (moved, full)
     print("RESHARD_BYTES_OK", moved, full)
 
+    # ---- allocation plans: leg spans + one-leg rebuild bytes ------------
+    from repro.dist import leg_state_bytes
+
+    aplan = man.plan_for_allocation([4, 4])     # 2-leg split on the 8 pool
+    assert aplan.key == plan8.key               # same execution substrate
+    assert aplan.leg_spans == ((0, 4), (4, 8))
+    assert man.plan_for_allocation([4]).key == plan4.key  # single delegates
+    sh_a = param_shardings(model.specs, aplan.mesh, layout)
+    pa = reshard_tree(params0, sh_a)
+    full_a = tree_bytes(pa)
+    leg0 = leg_state_bytes(pa, sh_a, aplan, 0)
+    leg1 = leg_state_bytes(pa, sh_a, aplan, 1)
+    # a one-leg rebuild moves strictly fewer bytes than a full restore —
+    # the byte-level sense in which a leg revocation is cheaper than
+    # losing (or checkpoint-restoring) the whole allocation
+    assert 0 < leg0 < full_a, (leg0, full_a)
+    assert 0 < leg1 < full_a, (leg1, full_a)
+    # together the legs cover at least the whole state (replicated slices
+    # can be counted on both legs, so >= rather than ==)
+    assert leg0 + leg1 >= full_a
+    # capped pool: a 16+16 allocation honors as 4+4 on 8 local devices
+    wide = man.plan_for_allocation([16, 16])
+    assert wide.device_count == 8 and wide.leg_spans == ((0, 4), (4, 8))
+    print("ALLOC_LEG_BYTES_OK", leg0, leg1, full_a)
+
     # ---- orchestrator: siwoft revocation -> live reshard + re-jit ------
     from repro.core.market import Market, MarketSet
     from repro.core.orchestrator import SpotTrainingOrchestrator
@@ -155,6 +180,34 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent(
     assert rep.reshard_bytes <= tree_bytes(params0) * 3 + 64
     assert all(np.isfinite(rep.losses))
     print("ORCH_RESHARD_OK", rep.reshard_bytes, rep.mesh_shapes)
+
+    # ---- allocation: one-leg revocation with NO same-shape repair ------
+    # Only two 8-dev markets + one 4-dev: when leg B revokes, no same-shape
+    # replacement exists, so the ordinary pick lands on the (A, C) split —
+    # and the changed leg's DCN crossing must still be billed (regression:
+    # this path used to drop the bytes silently).
+    am = [
+        Market(0, "big8.a", "r1", "r1a", 40, 1.2, device_count=8, interconnect_gbps=60.0),
+        Market(1, "big8.b", "r2", "r2a", 40, 1.2, device_count=8, interconnect_gbps=60.0),
+        Market(2, "mid4.c", "r3", "r3a", 40, 0.7, device_count=4, interconnect_gbps=25.0),
+    ]
+    ahp = np.full((3, 90), 0.35); ahp[2, ::60] = 1.0
+    afp = np.full((3, 24), 0.35); afp[1, 2:4] = 1.5
+    orch2 = SpotTrainingOrchestrator(
+        model, ds, make_mesh((4, 2), ("data", "model")),
+        MarketSet(am, ahp), MarketSet(am, afp, start_hour=90),
+        mode="siwoft", tc=TrainConfig(total_steps=80, warmup_steps=2),
+        segment_steps=10, steps_per_trace_hour=1, seed=0,
+        job_memory_gb=400.0,
+    )
+    rep2 = orch2.run(20)
+    assert rep2.allocations_used[0] == (0, 1), rep2.allocations_used
+    assert (0, 2) in rep2.allocations_used, rep2.allocations_used
+    assert rep2.revocations >= 1 and rep2.leg_repairs == 0
+    assert rep2.reshard_bytes > 0          # replacement still crossed DCN
+    assert rep2.useful_steps == 20
+    assert abs(sum(rep2.leg_costs.values()) - rep2.cost_dollars) < 1e-6
+    print("ALLOC_REPLACEMENT_BILLING_OK", rep2.reshard_bytes)
     """
 )
 
@@ -174,4 +227,6 @@ def test_meshplan_multi_device_subprocess():
     out = res.stdout + res.stderr
     assert "ROUNDTRIP_BITEXACT_OK" in res.stdout, out
     assert "RESHARD_BYTES_OK" in res.stdout, out
+    assert "ALLOC_LEG_BYTES_OK" in res.stdout, out
     assert "ORCH_RESHARD_OK" in res.stdout, out
+    assert "ALLOC_REPLACEMENT_BILLING_OK" in res.stdout, out

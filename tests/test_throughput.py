@@ -108,9 +108,10 @@ def test_ranking_flips_to_faster_shape_on_long_job():
 
     assert first_choice(10.0) == 0    # cheap slow shape
     assert first_choice(45.0) == 1    # pricier fast shape wins the long job
-    # the public helper must agree with the full Algorithm-1 path
-    assert alg.plan_first_choice(Job(10.0, 4.0), feats, policy) == 0
-    assert alg.plan_first_choice(Job(45.0, 4.0), feats, policy) == 1
+    # the public helper must agree with the full Algorithm-1 path; it now
+    # returns an Allocation — single-leg here, since both shapes fit
+    assert alg.plan_first_choice(Job(10.0, 4.0), feats, policy).markets == (0,)
+    assert alg.plan_first_choice(Job(45.0, 4.0), feats, policy).markets == (1,)
     # the flip is in the expected (risk-adjusted) cost, not the base cost:
     assert alg.cost_to_complete(45.0, feats, 0) < alg.cost_to_complete(45.0, feats, 1)
     assert alg.expected_cost_to_complete(45.0, feats, 0) > alg.expected_cost_to_complete(
