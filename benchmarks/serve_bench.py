@@ -1,0 +1,189 @@
+"""Serving-fleet economics: SLO-aware spot provisioning vs on-demand and
+static over-replication, on the same replayable price traces.
+
+The serving analogue of ``orchestrator_bench.py``'s thesis check. Three
+policies serve identical open-loop token traces (a steady floor and a
+diurnal swing) over the same future price window:
+
+* **fleet**  — the ``repro.serve`` subsystem: replicas admitted by MTTR
+  against a rolling SLO horizon, spread across low-correlation markets,
+  revocations repaired by PARAMS-ONLY migration over the DCN (KV cache
+  dropped + re-prefilled);
+* **on_demand** — replicas on the best $-per-token on-demand shape; never
+  revoked; the availability bar at sticker price;
+* **static** — spot with no market intelligence: over-replicated capacity
+  (×1.5) on the cheapest suitable markets; a revocation pulls the FULL
+  serving state (params + cache) back through remote storage.
+
+Asserted, not narrated (the run aborts on violation):
+
+* fleet SLO-violation seconds ≤ on-demand's, at < its cost (both
+  scenarios),
+* every fleet migration moves strictly fewer bytes than the same
+  revocation's full restore — and strictly fewer than the TRAINING
+  path's restore (opt state never moves for serving).
+
+Besides the CSV on stdout, writes machine-readable ``BENCH_serve.json``
+(monotonic scenario ids, schema enforced by ``tools/check_bench.py``) so
+the serving perf trajectory is tracked across PRs like the orchestrator's.
+
+    python benchmarks/serve_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+
+import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_JSON = REPO_ROOT / "BENCH_serve.json"
+
+CSV_HEADER = (
+    "scenario,policy,cost_usd,slo_violation_s,served_mtok,shed_tokens,"
+    "queued_tok_h,revocations,repairs,migrated_bytes,restored_bytes,replicas"
+)
+
+
+def build_workload():
+    """Serving footprint from the real reduced model: params + KV cache at
+    batch 4 × 256 context (no optimizer state), plus the migration byte
+    quantities the fleet bills."""
+    from repro.config import get_arch
+    from repro.dist import serve_state_bytes
+    from repro.models import build_model
+    from repro.models.common import param_bytes
+    from repro.serve import ServingWorkload
+
+    model = build_model(get_arch("qwen3-4b").reduced())
+    pb = param_bytes(model.specs)
+    sb = serve_state_bytes(model, batch=4, seq_len=256)
+    return ServingWorkload(
+        target_tokens_per_sec=480.0,
+        replica_tokens_per_sec=100.0,
+        state_gb=sb / 2**30,
+        param_bytes=pb,
+        cache_bytes=sb - pb,
+        inflight_context_tokens=4 * 256.0,
+    )
+
+
+def traces(hours: int):
+    """Two deterministic offered-rate traces (tokens/sec per hour). Hour 0
+    is demand-free in both — the fleet and the baselines boot on equal
+    terms, so SLO comparisons measure provisioning quality, not warmup."""
+    steady = np.full(hours, 350.0)
+    steady[0] = 0.0
+    t = np.arange(hours, dtype=float)
+    diurnal = 300.0 - 180.0 * np.cos(2 * math.pi * ((t % 24) / 24.0))
+    diurnal[0] = 0.0
+    return [("steady", steady), ("diurnal", diurnal)]
+
+
+def run_policies(hist, fut, wl, hours, rate):
+    from repro.core import provisioner as alg
+    from repro.serve import FleetSimulator, ServePolicy, on_demand_reference
+
+    feats = alg.MarketFeatures.from_history(hist)
+    fleet_policy = ServePolicy(
+        slo_horizon_hours=24.0, capacity_headroom=1.25, cache_policy="drop"
+    )
+    static_policy = ServePolicy(slo_horizon_hours=24.0, capacity_headroom=1.5)
+    return {
+        "fleet": FleetSimulator(hist, fut, wl, fleet_policy).run(hours, rate),
+        "on_demand": on_demand_reference(wl, feats, fut, hours, rate, fleet_policy),
+        "static": FleetSimulator(hist, fut, wl, static_policy, mode="static").run(
+            hours, rate
+        ),
+    }
+
+
+def report_row(scenario, policy, rep):
+    return (
+        f"{scenario},{policy},{rep.cost_dollars:.4f},"
+        f"{rep.slo_violation_seconds:.1f},"
+        f"{rep.router.served_tokens / 1e6:.3f},{rep.router.shed_tokens:.1f},"
+        f"{rep.router.queued_token_seconds / 3600.0:.1f},"
+        f"{rep.revocations},{rep.repairs},"
+        f"{rep.migrated_bytes},{rep.restored_bytes},{rep.replicas_provisioned}"
+    )
+
+
+def rep_json(rep):
+    return {
+        "cost_usd": round(rep.cost_dollars, 6),
+        "slo_violation_seconds": round(rep.slo_violation_seconds, 3),
+        "served_tokens": round(rep.router.served_tokens, 1),
+        "shed_tokens": round(rep.router.shed_tokens, 1),
+        "queued_token_seconds": round(rep.router.queued_token_seconds, 1),
+        "revocations": rep.revocations,
+        "repairs": rep.repairs,
+        "migrated_bytes": rep.migrated_bytes,
+        "restored_bytes": rep.restored_bytes,
+        "replicas_provisioned": rep.replicas_provisioned,
+        "capacity_tokens_per_sec": round(rep.capacity_tokens_per_sec, 3),
+        "billing_buffer_usd": round(rep.breakdown.cost["billing_buffer"], 6),
+    }
+
+
+def main(quick: bool = False) -> None:
+    from repro.core import generate_markets, split_history_future
+
+    wl = build_workload()
+    days = 3 if quick else 13
+    hours = 24 * days
+    ms = generate_markets(seed=4, n_hours=24 * 90 + hours + 24)
+    hist, fut = split_history_future(ms, 24 * 90)
+
+    print(CSV_HEADER)
+    scenarios = []
+    for sid, (name, rate) in enumerate(traces(hours)):
+        reps = run_policies(hist, fut, wl, float(hours), rate)
+        for policy, rep in reps.items():
+            print(report_row(name, policy, rep))
+
+        fleet, od, static = reps["fleet"], reps["on_demand"], reps["static"]
+        # --- the acceptance inequalities, enforced -----------------------
+        assert fleet.slo_violation_seconds <= od.slo_violation_seconds, (
+            name, fleet.slo_violation_seconds, od.slo_violation_seconds)
+        assert fleet.cost_dollars < od.cost_dollars, (
+            name, fleet.cost_dollars, od.cost_dollars)
+        per_restore = wl.param_bytes + wl.cache_bytes  # full serving state
+        if fleet.repairs:
+            per_migration = fleet.migrated_bytes / fleet.repairs
+            assert per_migration < per_restore, (per_migration, per_restore)
+            assert per_migration < 3 * wl.param_bytes  # training path
+        scenarios.append({
+            "id": sid,
+            "name": name,
+            "hours": hours,
+            "policies": {p: rep_json(r) for p, r in reps.items()},
+        })
+        print(
+            f"# {name}: fleet ${fleet.cost_dollars:.2f} @ "
+            f"{fleet.slo_violation_seconds:.0f}s viol vs on-demand "
+            f"${od.cost_dollars:.2f} @ {od.slo_violation_seconds:.0f}s; "
+            f"static ${static.cost_dollars:.2f} restored "
+            f"{static.restored_bytes} B"
+        )
+
+    BENCH_JSON.write_text(json.dumps({
+        "bench": "serve",
+        "quick": quick,
+        "workload": {
+            "target_tokens_per_sec": wl.target_tokens_per_sec,
+            "state_gb": round(wl.state_gb, 6),
+            "param_bytes": wl.param_bytes,
+            "cache_bytes": wl.cache_bytes,
+        },
+        "scenarios": scenarios,
+    }, indent=1) + "\n")
+    print(f"# wrote {BENCH_JSON.relative_to(REPO_ROOT)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="3-day smoke run")
+    main(**vars(ap.parse_args()))

@@ -4,8 +4,8 @@ Every simulated job produces a :class:`Breakdown` with the exact stacked
 components the paper plots:
 
 time components  : execution, re_execution, checkpointing, recovery,
-                   reshard, startup
-cost components  : the same six (time × in-effect spot price) plus
+                   reshard, startup, slo_violation
+cost components  : the same seven (time × in-effect spot price) plus
                    billing_buffer — the cost of the unused remainder of each
                    started billing cycle (EC2 bills whole hours; the paper
                    calls these "buffer costs of billing cycles").
@@ -16,6 +16,26 @@ revocation triggers in siwoft/hybrid modes: bytes actually moved (see
 interconnect. It sits head-to-head with ``recovery`` (checkpoint restore
 through remote storage) in Fig-1-style breakdowns, so the "no-FT is
 cheaper" comparison is priced in bytes and dollars, not asserted.
+
+``slo_violation`` (beyond the paper, serving) is the wall time a serving
+fleet spent out of its latency SLO (``repro.serve.router``); the fleet
+simulator adds it to ``Breakdown.time`` directly — it is a penalty clock,
+not an occupancy interval, so no session bills dollars against it. The
+serving token counters (``served_tokens`` / ``shed_tokens`` /
+``queued_token_seconds``) ride on the Breakdown the same way
+``revocations`` does: merged by :meth:`Breakdown.add`, zero for batch
+jobs.
+
+Leg-level billing-cycle staggering (beyond the paper): by default every
+leg of a session starts its billing cycle at the session start and pays
+its buffer at the session end ("cycles aligned"). A session may instead
+carry per-leg ``leg_anchors`` (the absolute wall hour each leg's cycle
+phase is anchored to — its tenure start) and ``leg_releases`` (whether
+the leg's occupancy ends with this session). An unreleased leg pays NO
+buffer at session end — its cycle continues into the next session that
+carries the same anchor — so a mid-cycle one-leg repair bills only the
+replaced leg's partial hour; :func:`settle_leg` charges the final partial
+cycle of a leg whose tenure ends without a closing session.
 """
 from __future__ import annotations
 
@@ -25,6 +45,7 @@ from typing import Dict, List, Optional, Tuple
 
 TIME_COMPONENTS = (
     "execution", "re_execution", "checkpointing", "recovery", "reshard", "startup",
+    "slo_violation",
 )
 COST_COMPONENTS = TIME_COMPONENTS + ("billing_buffer",)
 
@@ -49,6 +70,13 @@ class Breakdown:
     # market_id -1 is the on-demand reference). INVARIANT, pinned by
     # tests/test_allocation.py: sum(leg_cost.values()) == total_cost.
     leg_cost: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # serving counters (repro.serve.router): tokens the fleet served /
+    # shed, and the integral of queued tokens over time (token·seconds).
+    # Zero for batch jobs; the SLO-violation CLOCK lands in
+    # time["slo_violation"], these carry the matching token volumes.
+    served_tokens: float = 0.0
+    shed_tokens: float = 0.0
+    queued_token_seconds: float = 0.0
 
     @property
     def total_time(self) -> float:
@@ -71,6 +99,9 @@ class Breakdown:
         self.revocations += other.revocations
         self.sessions += other.sessions
         self.wall_time += other.wall_time
+        self.served_tokens += other.served_tokens
+        self.shed_tokens += other.shed_tokens
+        self.queued_token_seconds += other.queued_token_seconds
         return self
 
 
@@ -84,16 +115,37 @@ class Session:
     session (legs run in lockstep; a leg is occupied for every wall hour
     the job runs, whatever component that hour lands in). Defaults to the
     single-market ``(market_id,)``, which bills identically to the
-    pre-allocation accounting."""
+    pre-allocation accounting.
+
+    ``leg_anchors`` (optional, one per leg) staggers billing cycles: each
+    leg's whole-hour cycles are phased from its own anchor — the absolute
+    wall hour its tenure began, ≤ ``start_wall`` — instead of the shared
+    session start. ``leg_releases`` (optional, one per leg) marks which
+    legs' occupancy ENDS with this session; a leg not released pays no
+    billing buffer here (its current cycle continues into a later session
+    carrying the same anchor, or is settled by :func:`settle_leg`). When
+    ``leg_anchors`` is None the legacy aligned-cycle billing applies
+    exactly: every leg anchors at the session start and is released at
+    the session end."""
 
     market_id: int
     start_wall: float
     intervals: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
     legs: Optional[Tuple[int, ...]] = None
+    leg_anchors: Optional[Tuple[float, ...]] = None
+    leg_releases: Optional[Tuple[bool, ...]] = None
 
     def __post_init__(self):
         if self.legs is None:
             self.legs = (self.market_id,)
+        if self.leg_anchors is not None:
+            assert len(self.leg_anchors) == len(self.legs)
+            assert all(a <= self.start_wall + 1e-12 for a in self.leg_anchors), (
+                "a leg's cycle anchor is its tenure start — never after the "
+                "session it bills in"
+            )
+        if self.leg_releases is not None:
+            assert len(self.leg_releases) == len(self.legs)
 
     def add(self, component: str, hours: float) -> None:
         if hours > 0:
@@ -116,8 +168,10 @@ def bill_session(
     leg at its own market's price — and the per-leg shares land in
     ``Breakdown.leg_cost`` so allocation bills decompose exactly. The
     unused tail of the final billing cycle (per leg: whole-hour billing is
-    per spot request) is charged to ``billing_buffer``. Returns the wall
-    time consumed.
+    per spot request) is charged to ``billing_buffer``. With staggered
+    ``leg_anchors``, each RELEASED leg's buffer runs from the session end
+    to the next cycle boundary of ITS OWN anchor (unreleased legs pay no
+    buffer — their cycle is still open). Returns the wall time consumed.
     """
     t = session.start_wall
     for comp, dur in session.intervals:
@@ -133,12 +187,56 @@ def bill_session(
             t += step
             remaining -= step
     used = session.used_hours
-    billed = math.ceil(max(used, 1e-9) / BILLING_CYCLE_HOURS) * BILLING_CYCLE_HOURS
-    buffer_hours = billed - used
     tail_hour = math.floor(t)
-    for leg in session.legs:
-        leg_buffer = buffer_hours * price_of_hour(leg, tail_hour)
-        breakdown.cost["billing_buffer"] += leg_buffer
-        breakdown.add_leg_cost(leg, leg_buffer)
+    if session.leg_anchors is None:
+        # legacy aligned cycles: every leg billed ceil(used) whole hours
+        billed = math.ceil(max(used, 1e-9) / BILLING_CYCLE_HOURS) * BILLING_CYCLE_HOURS
+        buffer_hours = billed - used
+        for leg in session.legs:
+            leg_buffer = buffer_hours * price_of_hour(leg, tail_hour)
+            breakdown.cost["billing_buffer"] += leg_buffer
+            breakdown.add_leg_cost(leg, leg_buffer)
+    else:
+        releases = session.leg_releases or (True,) * len(session.legs)
+        end = session.start_wall + used
+        for leg, anchor, released in zip(session.legs, session.leg_anchors, releases):
+            if not released:
+                continue  # cycle still open; settled by a later session
+            # anchor == session start reproduces the legacy ceil(used)
+            # arithmetic EXACTLY (no (start + used) - anchor float drift)
+            held = used if anchor == session.start_wall else end - anchor
+            buffer_hours = _held_buffer_hours(held)
+            leg_buffer = buffer_hours * price_of_hour(leg, tail_hour)
+            breakdown.cost["billing_buffer"] += leg_buffer
+            breakdown.add_leg_cost(leg, leg_buffer)
     breakdown.sessions += 1
     return used
+
+
+def _held_buffer_hours(held: float) -> float:
+    """Unused remainder of the billing cycle open after ``held`` hours of
+    occupancy since the leg's anchor: the distance to the next cycle
+    boundary, one full cycle if the tenure never ran (whole-hour billing
+    starts at provisioning, exactly like the legacy ceil rule)."""
+    held = max(held, 0.0)
+    billed = math.ceil(max(held, 1e-9) / BILLING_CYCLE_HOURS) * BILLING_CYCLE_HOURS
+    return billed - held
+
+
+def settle_leg(
+    breakdown: Breakdown,
+    market_id: int,
+    anchor: float,
+    end_wall: float,
+    price_of_hour,
+) -> float:
+    """Close a staggered leg's final billing cycle OUTSIDE a session: charge
+    the unused remainder from ``end_wall`` (when the leg's occupancy really
+    ended) to the next cycle boundary of its ``anchor``. Used when a leg
+    deferred its buffer (``leg_releases`` False) but the allocation that
+    replaced it no longer carries the leg. Returns the dollars charged."""
+    buffer_hours = _held_buffer_hours(end_wall - anchor)
+    dollars = buffer_hours * price_of_hour(market_id, math.floor(end_wall))
+    breakdown.cost["billing_buffer"] += dollars
+    breakdown.add_leg_cost(market_id, dollars)
+    return dollars

@@ -84,7 +84,7 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.config.base import ShardingLayout, TrainConfig
 from repro.core import provisioner as alg
-from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.accounting import Breakdown, Session, bill_session, settle_leg
 from repro.core.allocation import Allocation, Leg
 from repro.core.market import (
     THROUGHPUT_EFFICIENCY_CEIL,
@@ -395,6 +395,12 @@ class SpotTrainingOrchestrator:
         # revocation time and billed over DCN on the repaired session
         pending_repair: Optional[Tuple[Allocation, int]] = None
         pending_repair_bytes = 0
+        # staggered billing cycles across a split revocation: surviving
+        # legs defer their billing buffer (their occupancy continues into
+        # the repaired session) — market -> (cycle anchor, deferred end
+        # wall), settled when the leg is finally dropped or at run end
+        carry_anchors: Dict[int, Tuple[float, float]] = {}
+        price_of = lambda m, h: self.future.spot_price(m, h)
         step = 0
         wall = 0.0  # trace wall-clock hours; advances at the shape's rate
         t0 = time.perf_counter()
@@ -443,6 +449,20 @@ class SpotTrainingOrchestrator:
             )
 
             session = Session(alloc.legs[0].market, wall, legs=alloc.markets)
+            if carry_anchors:
+                # legs surviving the last split revocation carry their own
+                # billing-cycle anchors into this session; carried legs
+                # this allocation no longer holds settle their final
+                # partial cycle now (leg-level billing-cycle staggering)
+                session.leg_anchors = tuple(
+                    carry_anchors.get(m, (wall,))[0] for m in alloc.markets
+                )
+                for m in list(carry_anchors):
+                    if m in alloc.markets:
+                        del carry_anchors[m]
+                    else:
+                        a, end = carry_anchors.pop(m)
+                        settle_leg(bd, m, a, end, price_of)
             session.add("startup", self.ov.startup_hours)
 
             if pending_repair is not None and active_key == plan.key:
@@ -597,10 +617,32 @@ class SpotTrainingOrchestrator:
                     pending_repair_bytes = leg_state_bytes(
                         seg_state, state_sh, plan, leg_idx
                     )
-            wall += bill_session(
-                session, lambda m, h: self.future.spot_price(m, h), bd
-            )
+            # leg-level billing-cycle staggering: when a split lost ONE leg
+            # and the live state survives (a repair is pending), only the
+            # revoked leg's cycle closes here — the survivors' occupancy
+            # continues into the repaired session, so their buffers defer
+            # with their original anchors
+            defer = pending_repair is not None and pending_repair[0] is alloc
+            if defer or session.leg_anchors is not None:
+                anchors = session.leg_anchors or (
+                    (session.start_wall,) * len(alloc.markets)
+                )
+                releases = (
+                    tuple(m == pending_repair[1] for m in alloc.markets)
+                    if defer
+                    else (True,) * len(alloc.markets)
+                )
+                session.leg_anchors = anchors
+                session.leg_releases = releases
+            wall += bill_session(session, price_of, bd)
+            if defer:
+                end = session.start_wall + session.used_hours
+                for m, a, rel in zip(alloc.markets, anchors, releases):
+                    if not rel:
+                        carry_anchors[m] = (a, end)
 
+        for m, (a, end) in sorted(carry_anchors.items()):
+            settle_leg(bd, m, a, end, price_of)
         if self.ckpt is not None:
             self.ckpt.wait()
         return OrchestratorReport(

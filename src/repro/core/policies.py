@@ -100,6 +100,22 @@ class SiwoftPolicy:
     # beats the best single shape by at least that fraction.
     max_legs: int = 2
     split_margin: Optional[float] = None
+    # pairwise co-revocation budget for split legs: EVERY pair of legs in a
+    # candidate split must co-revoke below this cut (a split correlated
+    # with itself revokes as one market but pays DCN prices). None -> the
+    # step-13 `correlation_threshold` doubles as the budget. Three-leg
+    # splits (`max_legs=3`) face the test over all three pairs, and their
+    # MTTR still composes as min over legs — admission only gets harder.
+    split_correlation_budget: Optional[float] = None
+
+    @property
+    def split_corr_cut(self) -> float:
+        """The pairwise co-revocation cut the split search applies."""
+        return (
+            self.split_correlation_budget
+            if self.split_correlation_budget is not None
+            else self.correlation_threshold
+        )
 
     @property
     def uses_checkpoints(self) -> bool:

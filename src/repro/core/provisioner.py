@@ -290,13 +290,17 @@ def find_suitable_allocations(
       shape by at least that fraction.
 
     Splits are pairs-to-``max_legs``-tuples of distinct markets whose
-    combined memory fits the job; legs whose pairwise co-revocation exceeds
-    the policy's correlation threshold are skipped when a policy is given
-    (a split correlated with itself revokes as one market but pays DCN
-    prices — strictly dominated). Ranking is by allocation expected
-    cost-to-complete; the honest min-MTTR survival model and the
-    DCN-discounted throughput are both priced in, so the search only
-    surfaces splits that genuinely earn their coupling cost.
+    combined memory fits the job, gated by a PAIRWISE correlation budget
+    when a policy is given (``SiwoftPolicy.split_corr_cut``): every pair
+    of legs must co-revoke below the budget — a split correlated with
+    itself revokes as one market but pays DCN prices, strictly dominated.
+    The gate is enforced incrementally (each new leg against every chosen
+    leg), so a 3-leg candidate under ``max_legs=3`` is admitted only when
+    all three pairs qualify; its MTTR still composes as min over legs, so
+    wider splits face a strictly harder admission test. Ranking is by
+    allocation expected cost-to-complete; the honest min-MTTR survival
+    model and the DCN-discounted throughput are both priced in, so the
+    search only surfaces splits that genuinely earn their coupling cost.
     """
     if policy is not None:
         max_legs = policy.max_legs if max_legs is None else max_legs
@@ -315,7 +319,7 @@ def find_suitable_allocations(
     if max_legs < 2:
         return singles
 
-    corr_cut = policy.correlation_threshold if policy is not None else 1.0
+    corr_cut = policy.split_corr_cut if policy is not None else 1.0
     totals = feats.total_memory_gb
     n = len(totals)
     pool = [i for i in range(n) if i not in exclude]

@@ -27,6 +27,7 @@ from repro.dist.meshplan import (
     live_shardings,
     mesh_shape_for,
     reshard_bytes,
+    serve_state_bytes,
     train_state_bytes,
     tree_bytes,
 )
@@ -49,6 +50,7 @@ __all__ = [
     "live_shardings",
     "mesh_shape_for",
     "reshard_bytes",
+    "serve_state_bytes",
     "train_state_bytes",
     "tree_bytes",
     "cache_shardings",

@@ -341,3 +341,21 @@ def train_state_bytes(model) -> int:
     from repro.models.common import param_bytes
 
     return 3 * param_bytes(model.specs)
+
+
+def serve_state_bytes(
+    model, batch: int, seq_len: int, *, int8_cache: bool = False
+) -> int:
+    """Footprint of one INFERENCE replica, in bytes: params once plus the
+    KV/decode cache at the configured batch and context length.
+
+    No optimizer state — a serving replica never holds Adam moments, which
+    is why it is strictly smaller than :func:`train_state_bytes` for the
+    same model and why a replica migration is params-only. This is the
+    number the fleet provisioner (``repro.serve.fleet``) matches against
+    an instance shape's total memory.
+    """
+    from repro.models.common import param_bytes
+
+    cache = model.cache_specs(batch, seq_len, int8=int8_cache)
+    return param_bytes(model.specs) + param_bytes(cache)

@@ -10,12 +10,31 @@ sharded with zero code change.
 
     python -m repro.launch.serve --arch <id> [--batch 4] [--prompt-len 64]
         [--new-tokens 16] [--int8-cache] [--model-parallel 1]
+
+``--plan`` mode (the serving-fleet subsystem, ``repro.serve``): serve on
+an :class:`ElasticMeshManager` plan instead of the host mesh, so a
+serving replica can migrate between instance shapes like training does.
+``--plan 8,4 --revoke-after 3`` decodes 3 tokens on the 8-device plan,
+then simulates a spot revocation: the params move to the 4-device plan as
+a PARAMS-ONLY cross-mesh reshard (asserted strictly smaller than the
+training path's restore — no optimizer state exists to move) and the KV
+cache either rides along over the DCN (``--cache-policy migrate``) or is
+dropped and re-prefilled from the tokens generated so far
+(``--cache-policy drop``, the default). Decode then continues on the new
+mesh. A ``PLAN_JSON`` line reports the byte accounting and the decoded
+rows for the subprocess round-trip test. Without ``--plan`` the legacy
+host-mesh path below runs unchanged (bit-exact with pre-plan serve.py).
+
+    python -m repro.launch.serve --arch <id> --plan 8,4 --revoke-after 3
+        [--cache-policy drop|migrate]
 """
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ShardingLayout, get_arch, list_archs
 from repro.dist import (
@@ -29,6 +48,153 @@ from repro.models import build_model
 from repro.train.steps import build_decode_step, build_prefill_step
 
 
+def _serve_batch(cfg, B, S):
+    """The (seeded, deterministic) serving inputs both paths share."""
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size, jnp.int32)}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        batch["patches"] = jax.random.normal(jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16)
+    return batch
+
+
+def _serve_steps(model, cfg, layout, mesh, batch, total, int8):
+    """Sharded prefill/decode jits for one mesh — identical construction to
+    the legacy host-mesh path (same shardings, same donation, same
+    constrainer), parameterized by the plan's mesh."""
+    constrain = make_activation_constrainer(mesh, layout, cfg)
+    p_sh = param_shardings(model.specs, mesh, layout)
+    in_sh = batch_shardings(batch, mesh)
+    c_specs = model.cache_specs(batch["tokens"].shape[0], total, int8=int8)
+    c_sh = cache_shardings(c_specs, mesh, layout)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    prefill = jax.jit(
+        build_prefill_step(model, layout, total, constrain),
+        in_shardings=(p_sh, in_sh),
+        out_shardings=(None, c_sh),
+    )
+    decode = jax.jit(
+        build_decode_step(model, layout, constrain),
+        in_shardings=(p_sh, c_sh, in_sh["tokens"], repl),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    return p_sh, c_sh, in_sh, prefill, decode
+
+
+def plan_main(args) -> None:
+    """Serve on ElasticMeshManager plans with a live shape migration."""
+    from repro.dist import ElasticMeshManager, reshard_tree
+    from repro.dist.meshplan import (
+        ThroughputTracker,
+        live_shardings,
+        reshard_bytes,
+    )
+    from repro.serve.migrate import (
+        assert_params_only,
+        replica_param_bytes_moved,
+    )
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    layout = ShardingLayout(int8_kv_cache=args.int8_cache)
+    man = ElasticMeshManager()
+    counts = [int(x) for x in args.plan.split(",")]
+    tracker = ThroughputTracker()
+
+    B, S = args.batch, args.prompt_len
+    total = S + args.new_tokens
+    batch = _serve_batch(cfg, B, S)
+    params_host = model.init(jax.random.key(0))
+
+    plan = man.plan_for(counts[0])
+    p_sh, c_sh, in_sh, prefill, decode = _serve_steps(
+        model, cfg, layout, plan.mesh, batch, total, args.int8_cache
+    )
+    params = jax.device_put(params_host, p_sh)
+    batch = jax.device_put(batch, in_sh)
+
+    migrated = {"params_bytes": 0, "cache_bytes": 0, "train_path_bytes": 0,
+                "migrated_at": None, "cache_policy": args.cache_policy}
+    revoke_after = args.revoke_after if len(counts) > 1 else 0
+    toks = []
+    with plan.mesh:
+        logits, cache = prefill(params, batch)
+        jax.block_until_ready(logits)
+        tok = jax.device_put(
+            jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None],
+            in_sh["tokens"],
+        )
+        toks.append(np.asarray(tok))
+    print(f"plan[0]: {plan.device_count} devices, mesh {plan.mesh_shape}")
+
+    i = 0
+    while i < args.new_tokens - 1:
+        if revoke_after and i == revoke_after:
+            # --- spot revocation: live shape migration -----------------
+            gen = np.concatenate(toks, axis=1)
+            plan = man.plan_for(counts[1])
+            p_sh, c_sh, in_sh, prefill, decode = _serve_steps(
+                model, cfg, layout, plan.mesh, batch, total, args.int8_cache
+            )
+            moved = replica_param_bytes_moved(params, p_sh)
+            params = reshard_tree(params, p_sh)
+            migrated["params_bytes"] = moved
+            migrated["train_path_bytes"] = assert_params_only(moved, model)
+            migrated["migrated_at"] = i
+            if args.cache_policy == "migrate":
+                migrated["cache_bytes"] = reshard_bytes(
+                    cache, live_shardings(cache), c_sh
+                )
+                cache = reshard_tree(cache, c_sh)
+                batch = jax.device_put(batch, in_sh)
+            else:
+                # drop: the cache died with the instance; re-prefill the
+                # prompt + every token already fed to the old cache (the
+                # newest token rides the next decode call), billed as
+                # recompute on the replacement
+                batch = jax.device_put(batch, in_sh)
+                refill = dict(batch)
+                refill["tokens"] = jax.device_put(
+                    jnp.asarray(
+                        np.concatenate(
+                            [np.asarray(batch["tokens"]), gen[:, :i]], axis=1
+                        )
+                    ),
+                    in_sh["tokens"],
+                )
+                with plan.mesh:
+                    _, cache = prefill(params, refill)
+            tok = jax.device_put(tok, in_sh["tokens"])
+            print(
+                f"revoked after token {i}: migrated to {plan.device_count} "
+                f"devices, mesh {plan.mesh_shape}; params-only "
+                f"{migrated['params_bytes']} B < train path "
+                f"{migrated['train_path_bytes']} B; cache={args.cache_policy}"
+            )
+        with plan.mesh:
+            t0 = time.perf_counter()
+            logits, cache = decode(params, cache, tok, jnp.int32(S + i))
+            tok = jax.device_put(
+                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None],
+                in_sh["tokens"],
+            )
+            jax.block_until_ready(tok)
+            tracker.observe(plan.key, 1, time.perf_counter() - t0)
+        toks.append(np.asarray(tok))
+        i += 1
+
+    rows = np.concatenate(toks, axis=1)
+    sps = {f"{k[1][0]}x{k[1][1]}": round(v, 3) for k, v in tracker.measured.items()}
+    print("first row:", rows[0].tolist())
+    print("PLAN_JSON " + json.dumps({
+        "plans": counts,
+        "tokens": rows.tolist(),
+        "measured_steps_per_sec": sps,
+        **migrated,
+    }))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -37,7 +203,20 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--int8-cache", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--plan", default="",
+                    help="serve on ElasticMeshManager plans: comma-separated "
+                         "device counts; the second entry is the migration "
+                         "target (e.g. 8,4)")
+    ap.add_argument("--revoke-after", type=int, default=0,
+                    help="decode this many tokens, then revoke + migrate to "
+                         "the second --plan entry")
+    ap.add_argument("--cache-policy", choices=("drop", "migrate"),
+                    default="drop",
+                    help="on migration: drop the KV cache and re-prefill, "
+                         "or reshard it over the DCN")
     args = ap.parse_args()
+    if args.plan:
+        return plan_main(args)
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)

@@ -1,0 +1,54 @@
+"""``repro.serve`` — SLO-aware spot provisioning for inference fleets.
+
+The serving face of the paper's thesis: instead of admitting a batch job
+whose wall time an MTTR must dominate, the fleet provisioner admits
+replica markets whose MTTR dominates a rolling SLO horizon, spreads
+replicas across low-correlation markets, and treats a revocation as a
+params-only live migration — availability from market diversity, not
+from redundancy mechanisms.
+
+* :mod:`repro.serve.fleet`   — fleet sizing, admission, diversity, the
+  trace-driven fleet simulator and its baselines;
+* :mod:`repro.serve.router`  — the deterministic open-loop request queue
+  (served/shed tokens, SLO-violation clock, exact token conservation);
+* :mod:`repro.serve.migrate` — the params-only migration cost model and
+  the live reshard helpers ``launch/serve.py --plan`` drives for real.
+"""
+from repro.serve.fleet import (
+    FleetPlan,
+    FleetReport,
+    FleetSimulator,
+    Replica,
+    ServePolicy,
+    ServingWorkload,
+    on_demand_reference,
+    provision_fleet,
+    repair_fleet,
+    replica_rate,
+)
+from repro.serve.migrate import MigrationCost, migration_cost
+from repro.serve.router import (
+    CapacityEvent,
+    RouterStats,
+    drain_interval,
+    route_trace,
+)
+
+__all__ = [
+    "CapacityEvent",
+    "FleetPlan",
+    "FleetReport",
+    "FleetSimulator",
+    "MigrationCost",
+    "Replica",
+    "RouterStats",
+    "ServePolicy",
+    "ServingWorkload",
+    "drain_interval",
+    "migration_cost",
+    "on_demand_reference",
+    "provision_fleet",
+    "repair_fleet",
+    "replica_rate",
+    "route_trace",
+]

@@ -1,0 +1,651 @@
+"""SLO-aware spot provisioning for a fleet of inference replicas.
+
+The paper admits a BATCH job to a spot market when the market's MTTR
+dominates the job's wall time; a serving fleet has no wall time — it runs
+until turned off. The serving analogue (Qu et al., *A Reliable and
+Cost-Efficient Auto-Scaling System for Web Applications Using
+Heterogeneous Spot Instances*) is availability from market diversity:
+
+* **footprint** — a replica holds params + KV cache at the configured
+  batch/context (``dist.meshplan.serve_state_bytes``), never optimizer
+  state, so suitability runs the same ``find_suitable_allocations`` path
+  as training with a strictly smaller memory requirement;
+* **admission** — a market is admitted when its MTTR dominates a *rolling
+  SLO horizon* (``lifetime_factor × slo_horizon_hours``), the window over
+  which the operator promises the SLO, instead of a job length. The
+  horizon is WALL clock: a faster shape does not shrink its exposure the
+  way it shrinks a batch job's, so admission deliberately does not divide
+  by throughput;
+* **diversity** — replicas spread across low-correlation markets
+  (``find_low_correlation``): one zone-wide price spike may take one
+  replica, never the fleet. Capacity is sized so the aggregate tokens/sec
+  meets the target with ``capacity_headroom``;
+* **revocation** — a revoked replica is a params-only migration onto a
+  replacement shape (``repro.serve.migrate``); the dead replica's load
+  re-routes to the survivors through the open-loop router until the
+  replacement is live. No checkpoints, no standby over-replication.
+
+Per-replica billing runs through ``core.accounting``, one session per
+replica tenure: each replica's whole-hour billing cycles start at its own
+provisioning instant (naturally staggered clocks — a repair bills only
+its own partial hours), and ``Breakdown.leg_cost`` decomposes the fleet
+bill exactly. The explicit ``leg_anchors``/``leg_releases`` machinery is
+the multi-leg-session form of the same rule, used by the training
+orchestrator's split-repair path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import provisioner as alg
+from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.allocation import Allocation
+from repro.core.market import MarketSet, shape_throughput
+from repro.core.policies import Job, OverheadModel, SiwoftPolicy
+from repro.serve.migrate import CACHE_POLICIES, MigrationCost, migration_cost
+from repro.serve.router import CapacityEvent, RouterStats, route_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    """Fleet provisioning + SLO knobs (the serving face of SiwoftPolicy)."""
+
+    name: str = "serve_fleet"
+    lifetime_factor: float = 2.0          # MTTR ≥ factor × SLO horizon
+    slo_horizon_hours: float = 24.0       # rolling horizon the SLO covers
+    correlation_threshold: float = 0.2    # pairwise spread across replicas
+    cache_policy: str = "drop"            # "drop" | "migrate" (migrate.py)
+    capacity_headroom: float = 1.1        # provision target × headroom
+    # N-1 sizing: keep adding replicas until the fleet still meets the raw
+    # target with its LARGEST replica gone — one revocation (the failure
+    # unit the MTTR admission prices) must not break the SLO while the
+    # params-only repair migrates in. This is capacity planning, not
+    # standby over-replication: every replica serves traffic.
+    survive_one_loss: bool = True
+    max_replicas: int = 32
+    max_legs: int = 2                     # split replicas when none fits
+    # SLO definition the router enforces
+    max_delay_seconds: float = 30.0       # queueing delay above = violation
+    shed_delay_seconds: float = 120.0     # clients abandon past this
+
+    def __post_init__(self):
+        assert self.cache_policy in CACHE_POLICIES, self.cache_policy
+
+    def as_siwoft(self) -> SiwoftPolicy:
+        """The SiwoftPolicy the shared Alg.-1 primitives consume."""
+        return SiwoftPolicy(
+            lifetime_factor=self.lifetime_factor,
+            correlation_threshold=self.correlation_threshold,
+            max_legs=self.max_legs,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingWorkload:
+    """What the fleet must deliver and what one replica costs to hold.
+
+    ``replica_tokens_per_sec`` is the decode rate of a replica on the
+    1-device reference shape; a replica on an allocation with relative
+    throughput θ delivers ``θ ×`` that (``shape_throughput`` — corrected
+    online by a ``ThroughputTracker`` when one is wired in).
+    """
+
+    target_tokens_per_sec: float
+    replica_tokens_per_sec: float
+    state_gb: float                 # serving footprint: params + KV cache
+    param_bytes: int                # migration pricing (params move)
+    cache_bytes: int = 0            # migration pricing (cache per policy)
+    prefill_tokens_per_sec: float = 0.0   # 0 -> 8× the decode rate
+    inflight_context_tokens: float = 0.0  # re-prefilled on a cache drop
+
+    @property
+    def prefill_rate(self) -> float:
+        return self.prefill_tokens_per_sec or 8.0 * self.replica_tokens_per_sec
+
+
+@dataclasses.dataclass(frozen=True)
+class Replica:
+    replica_id: int
+    allocation: Allocation
+    tokens_per_sec: float
+
+
+@dataclasses.dataclass
+class FleetPlan:
+    replicas: List[Replica]
+    relaxed_correlation: bool = False  # diversity filter had to be relaxed
+
+    @property
+    def capacity_tokens_per_sec(self) -> float:
+        return sum(r.tokens_per_sec for r in self.replicas)
+
+    @property
+    def markets(self) -> Tuple[int, ...]:
+        return tuple(m for r in self.replicas for m in r.allocation.markets)
+
+
+def replica_rate(
+    workload: ServingWorkload,
+    feats: alg.MarketFeatures,
+    alloc: Allocation,
+    correction: float = 1.0,
+) -> float:
+    """Tokens/sec a replica on ``alloc`` delivers: the reference decode
+    rate scaled by the allocation's relative throughput (analytic or
+    measured, see ``MarketFeatures.throughput``), times a measured
+    correction (``ThroughputTracker.correction``) when available."""
+    return (
+        workload.replica_tokens_per_sec
+        * alg.allocation_throughput(alloc, feats)
+        * max(float(correction), 1e-9)
+    )
+
+
+def _admitted(
+    workload: ServingWorkload,
+    feats: alg.MarketFeatures,
+    policy: ServePolicy,
+    exclude: Set[int],
+) -> List[Allocation]:
+    """Suitable allocations whose MTTR dominates the rolling SLO horizon,
+    cheapest-per-delivered-token first.
+
+    Suitability reuses the training split search (a serving replica whose
+    params fit no single shape splits over DCN like a training job); the
+    admission test deliberately replaces the job-wall-time comparison with
+    the wall-clock horizon — serving exposure does not shrink on faster
+    shapes."""
+    job = Job(length_hours=policy.slo_horizon_hours, memory_gb=workload.state_gb)
+    cands = alg.find_suitable_allocations(
+        job, feats, policy.as_siwoft(), exclude=exclude
+    )
+    floor = policy.lifetime_factor * policy.slo_horizon_hours
+    admitted = [a for a in cands if alg.allocation_mttr(a, feats) >= floor]
+    pool = admitted if admitted else cands  # Alg.-1 fallback discipline
+    return sorted(
+        pool,
+        key=lambda a: (
+            alg.allocation_price(a, feats) / max(replica_rate(workload, feats, a), 1e-9),
+            a.markets,
+        ),
+    )
+
+
+def _diverse(
+    alloc: Allocation,
+    placed: Sequence[int],
+    feats: alg.MarketFeatures,
+    policy: ServePolicy,
+) -> bool:
+    """Every leg of ``alloc`` co-revokes below the threshold with every
+    market the fleet already holds — find_low_correlation semantics, so
+    one spike cannot take two replicas."""
+    if not placed:
+        return True
+    W = alg.find_low_correlation(
+        feats, placed[0], policy, surviving=tuple(placed[1:])
+    )
+    return all(m in W for m in alloc.markets)
+
+
+def provision_fleet(
+    workload: ServingWorkload,
+    feats: alg.MarketFeatures,
+    policy: ServePolicy,
+    *,
+    exclude: Set[int] = frozenset(),
+) -> FleetPlan:
+    """Size and place the fleet: admitted allocations, cheapest per
+    delivered token first, each low-correlated with everything already
+    placed, until the aggregate capacity covers target × headroom.
+
+    With ``survive_one_loss`` (default) sizing continues past the target
+    until the fleet minus its largest replica still covers the RAW target
+    — the N-1 bar a single revocation must not break while its repair
+    migrates in. If the diversity filter starves the pool before the
+    target is met, it is relaxed (same refill discipline as Alg. 1 step
+    13) and the plan is flagged ``relaxed_correlation`` — capacity beats
+    purity, but the operator can see the compromise."""
+    target = workload.target_tokens_per_sec * policy.capacity_headroom
+
+    def satisfied(reps: Sequence[Replica]) -> bool:
+        cap = sum(r.tokens_per_sec for r in reps)
+        if cap < target:
+            return False
+        if policy.survive_one_loss and reps:
+            worst = max(r.tokens_per_sec for r in reps)
+            if cap - worst < workload.target_tokens_per_sec:
+                return False
+        return True
+
+    replicas: List[Replica] = []
+    used: Set[int] = set(exclude)
+    relaxed = False
+    for strict in (True, False):
+        cands = _admitted(workload, feats, policy, used)
+        for a in cands:
+            if len(replicas) >= policy.max_replicas:
+                break
+            if satisfied(replicas):
+                break
+            if any(m in used for m in a.markets):
+                continue
+            placed = [m for r in replicas for m in r.allocation.markets]
+            if strict and not _diverse(a, placed, feats, policy):
+                continue
+            if not strict:
+                relaxed = True
+            replicas.append(
+                Replica(len(replicas), a, replica_rate(workload, feats, a))
+            )
+            used.update(a.markets)
+        if satisfied(replicas):
+            break
+    if not replicas:
+        raise ValueError(
+            f"no admitted allocation fits a {workload.state_gb} GB replica"
+        )
+    return FleetPlan(replicas=replicas, relaxed_correlation=relaxed)
+
+
+def repair_fleet(
+    workload: ServingWorkload,
+    feats: alg.MarketFeatures,
+    policy: ServePolicy,
+    *,
+    revoked_market: int,
+    survivors: Sequence[int],
+    exclude: Set[int],
+    lost: Replica,
+) -> Optional[Replica]:
+    """Replacement for one revoked replica: low-correlated with the
+    revoked market AND every surviving replica (step-13 semantics),
+    admitted against the rolling horizon, preferring the lost replica's
+    device shape (a same-shape replacement reuses the compiled serving
+    step — the params-only reshard is the whole migration)."""
+    used = set(exclude) | set(survivors) | {revoked_market}
+    cands = _admitted(workload, feats, policy, used)
+    W = alg.find_low_correlation(
+        feats, revoked_market, policy, surviving=tuple(survivors)
+    )
+    diverse = [a for a in cands if all(m in W for m in a.markets)]
+    pool = diverse if diverse else cands
+    if not pool:
+        return None
+    lost_shape = lost.allocation.device_counts
+    best = min(
+        pool,
+        key=lambda a: (
+            0 if a.device_counts == lost_shape else 1,
+            alg.allocation_price(a, feats)
+            / max(replica_rate(workload, feats, a), 1e-9),
+            a.markets,
+        ),
+    )
+    return Replica(lost.replica_id, best, replica_rate(workload, feats, best))
+
+
+# ---------------------------------------------------------------------------
+# Fleet simulation on replayable price traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetReport:
+    breakdown: Breakdown
+    router: RouterStats
+    revocations: int
+    repairs: int
+    migrated_bytes: int            # params(+cache) over DCN, fleet policy
+    restored_bytes: int            # full serving state through storage
+    replicas_provisioned: int
+    markets_used: List[int]
+    capacity_tokens_per_sec: float
+    relaxed_correlation: bool = False
+
+    @property
+    def cost_dollars(self) -> float:
+        return self.breakdown.total_cost
+
+    @property
+    def slo_violation_seconds(self) -> float:
+        return self.breakdown.time["slo_violation"] * 3600.0
+
+
+class FleetSimulator:
+    """Drive a fleet through a future price trace, deterministically.
+
+    ``mode="fleet"`` — the tentpole policy: SLO-horizon admission,
+    correlation spread, params-only migration repair.
+    ``mode="static"`` — the over-replication baseline: capacity ×
+    ``policy.capacity_headroom`` on the cheapest suitable spot markets
+    with NO market intelligence (no MTTR admission, no correlation
+    spread); a revoked replica is replaced after a FULL serving-state
+    restore through remote storage (what running today's serve.py behind
+    an autoscaler amounts to).
+    """
+
+    def __init__(
+        self,
+        history: MarketSet,
+        future: MarketSet,
+        workload: ServingWorkload,
+        policy: ServePolicy,
+        overheads: OverheadModel = OverheadModel(),
+        *,
+        mode: str = "fleet",
+        tracker=None,  # Optional[dist.meshplan.ThroughputTracker]
+    ):
+        assert mode in ("fleet", "static")
+        self.feats = alg.MarketFeatures.from_history(history)
+        self.future = future
+        self.workload = workload
+        self.policy = policy
+        self.ov = overheads
+        self.mode = mode
+        self.tracker = tracker
+        self._rev = future.revocation_matrix()
+
+    # -- static-baseline provisioning (no market intelligence) ----------
+    def _provision_static(self, exclude: Set[int]) -> FleetPlan:
+        job = Job(
+            length_hours=self.policy.slo_horizon_hours,
+            memory_gb=self.workload.state_gb,
+        )
+        cands = [
+            Allocation.single(i, int(self.feats.device_count[i]))
+            for i in alg.find_suitable_servers(job, self.feats)
+            if i not in exclude
+        ]
+        cands.sort(key=lambda a: (float(self.feats.avg_price[a.legs[0].market]),
+                                  a.markets))
+        target = (
+            self.workload.target_tokens_per_sec * self.policy.capacity_headroom
+        )
+        replicas: List[Replica] = []
+        used = set(exclude)
+        for a in cands:
+            if sum(r.tokens_per_sec for r in replicas) >= target:
+                break
+            if len(replicas) >= self.policy.max_replicas:
+                break
+            if any(m in used for m in a.markets):
+                continue
+            replicas.append(
+                Replica(
+                    len(replicas), a, replica_rate(self.workload, self.feats, a)
+                )
+            )
+            used.update(a.markets)
+        if not replicas:
+            raise ValueError("static baseline: no suitable market")
+        return FleetPlan(replicas=replicas)
+
+    def _rate_correction(self, alloc: Allocation) -> float:
+        """Measured-vs-analytic correction for the allocation's mesh-plan
+        key, when a ThroughputTracker from a real serving loop is wired
+        in; 1.0 (analytic model stands) otherwise.
+
+        Same anchoring convention as the training orchestrator: the
+        analytic table covers EVERY observed plan key at the reference
+        bandwidth (the tracker's ratio corrects deviation from the
+        scaling LAW; the bandwidth-aware base value lives in the replica
+        rate itself), and the corrected rate is capped at the model's
+        sublinear ceiling so no calibration can claim superlinear
+        scaling."""
+        if self.tracker is None:
+            return 1.0
+        from repro.core.market import THROUGHPUT_EFFICIENCY_CEIL
+        from repro.dist.meshplan import mesh_shape_for
+
+        n = alloc.total_devices
+        key = (n, mesh_shape_for(n))
+        analytic = {k: shape_throughput(k[0]) for k in self.tracker.measured}
+        analytic[key] = shape_throughput(n)
+        corr = self.tracker.correction(key, analytic)
+        base = alg.allocation_throughput(alloc, self.feats)
+        cap = float(n) ** THROUGHPUT_EFFICIENCY_CEIL
+        return min(corr, cap / max(base, 1e-9))
+
+    def _next_revocation_hour(self, alloc: Allocation, wall: float) -> Optional[int]:
+        h0 = int(math.ceil(wall))
+        best = None
+        for m in alloc.markets:
+            tail = self._rev[m, h0:]
+            if tail.any():
+                h = h0 + int(np.argmax(tail))
+                best = h if best is None else min(best, h)
+        return best
+
+    def run(
+        self,
+        hours: float,
+        rate_tokens_per_sec: Sequence[float],
+    ) -> FleetReport:
+        """Serve ``rate_tokens_per_sec`` (offered tokens/sec per trace
+        hour) for ``hours`` trace hours under revocations."""
+        wl, policy, ov = self.workload, self.policy, self.ov
+        bd = Breakdown()
+        price = self.future.spot_price
+        if self.mode == "fleet":
+            plan = provision_fleet(wl, self.feats, policy)
+        else:
+            plan = self._provision_static(set())
+        revocations = repairs = 0
+        migrated = restored = 0
+        markets_used: List[int] = list(plan.markets)
+        n_provisioned = len(plan.replicas)
+        revoked: Set[int] = set()
+
+        # live set: (replica, provisioned_at, live_from, session). Sessions
+        # stay open until the replica dies or the simulation ends;
+        # billing-cycle anchors stagger at each replica's own provisioning
+        # instant. The capacity timeline is built from (time, delta) pairs
+        # and prefix-summed after sorting — a replica revoked before its
+        # startup completes cancels its own pending capacity exactly.
+        live: List[Tuple[Replica, float, float, Session]] = []
+        cap_deltas: List[Tuple[float, float]] = []
+
+        def start_replica(
+            rep: Replica,
+            at: float,
+            mig: Optional[MigrationCost] = None,
+            restore_hours: float = 0.0,
+        ):
+            # one session per replica tenure, anchored (whole-hour cycles
+            # and all) at its own provisioning instant — replicas bill on
+            # naturally staggered clocks. ``mig`` is the fleet policy's
+            # live migration (reshard wire time + re-prefill recompute);
+            # ``restore_hours`` is the static baseline's full-state pull
+            # through remote storage, billed to ``recovery`` like every
+            # other storage restore in the repo.
+            s = Session(
+                rep.allocation.legs[0].market, at, legs=rep.allocation.markets
+            )
+            s.add("startup", ov.startup_hours)
+            delay = ov.startup_hours
+            if mig is not None:
+                s.add("reshard", mig.wire_hours)
+                s.add("re_execution", mig.recompute_hours)
+                delay += mig.hours
+            if restore_hours > 0:
+                s.add("recovery", restore_hours)
+                delay += restore_hours
+            rate = rep.tokens_per_sec * self._rate_correction(rep.allocation)
+            live.append(
+                (dataclasses.replace(rep, tokens_per_sec=rate), at, at + delay, s)
+            )
+            cap_deltas.append((at + delay, rate))
+
+        for rep in plan.replicas:
+            start_replica(rep, 0.0, None)
+
+        # -- event loop: earliest next revocation among live replicas ----
+        for _ in range(10_000):
+            nxt: Optional[Tuple[int, int, int]] = None  # (hour, idx, market)
+            for i, (rep, t0, _, _) in enumerate(live):
+                h = self._next_revocation_hour(rep.allocation, t0)
+                if h is not None and h < hours and (nxt is None or h < nxt[0]):
+                    m = next(
+                        m for m in rep.allocation.markets if self._rev[m, h]
+                    )
+                    nxt = (h, i, m)
+            if nxt is None:
+                break
+            h, i, rev_market = nxt
+            rep, t0, t_live, session = live.pop(i)
+            revocations += 1
+            revoked.add(rev_market)
+            # the dead replica served until the revocation hour; its
+            # tenure ends there and its own cycles settle (whole-hour
+            # billing per spot request — same proxy as the batch paper)
+            session.add("execution", max(h - t0 - session.used_hours, 0.0))
+            bill_session(session, price, bd)
+            # capacity leaves when the replica dies — or never arrives, if
+            # it died mid-startup (the -delta lands on the +delta's time)
+            cap_deltas.append((max(float(h), t_live), -rep.tokens_per_sec))
+            # survivors absorb the load (the router sees the capacity
+            # dip); a replacement migrates in params-only
+            survivors = [m for r, _, _, _ in live for m in r.allocation.markets]
+            if self.mode == "fleet":
+                newrep = repair_fleet(
+                    wl, self.feats, policy,
+                    revoked_market=rev_market,
+                    survivors=survivors,
+                    exclude=revoked,
+                    lost=rep,
+                )
+                if newrep is not None:
+                    mig = migration_cost(
+                        param_bytes=wl.param_bytes,
+                        cache_bytes=wl.cache_bytes,
+                        cache_policy=policy.cache_policy,
+                        dcn_gbps=newrep.allocation.dcn_gbps,
+                        inflight_context_tokens=wl.inflight_context_tokens,
+                        prefill_tokens_per_sec=wl.prefill_rate
+                        * alg.allocation_throughput(newrep.allocation, self.feats),
+                    )
+                    migrated += mig.moved_bytes
+                    repairs += 1
+                    n_provisioned += 1
+                    markets_used.extend(newrep.allocation.markets)
+                    start_replica(newrep, float(h), mig)
+            else:
+                # static baseline: full serving state back through storage
+                newplan = None
+                try:
+                    newplan = self._provision_static(
+                        revoked | {m for m in survivors}
+                    )
+                except ValueError:
+                    pass
+                if newplan is not None and newplan.replicas:
+                    newrep = dataclasses.replace(
+                        newplan.replicas[0], replica_id=rep.replica_id
+                    )
+                    restored += wl.param_bytes + wl.cache_bytes
+                    repairs += 1
+                    n_provisioned += 1
+                    markets_used.extend(newrep.allocation.markets)
+                    start_replica(
+                        newrep, float(h),
+                        restore_hours=ov.restore_hours(wl.state_gb),
+                    )
+
+        # -- drain to the end of the window, settle every open session ---
+        for rep, t0, _, session in live:
+            session.add("execution", max(hours - t0 - session.used_hours, 0.0))
+            bill_session(session, price, bd)
+
+        # prefix-sum the sorted deltas into the absolute-capacity timeline
+        cap_events: List[CapacityEvent] = [CapacityEvent(0.0, 0.0)]
+        level = 0.0
+        for at, delta in sorted(cap_deltas):
+            level += delta
+            cap_events.append(CapacityEvent(at, max(level, 0.0)))
+
+        stats = route_trace(
+            rate_tokens_per_sec,
+            cap_events,
+            max_delay_seconds=policy.max_delay_seconds,
+            shed_delay_seconds=policy.shed_delay_seconds,
+            hours=hours,
+        )
+        stats.merge_into(bd)
+        bd.revocations = revocations
+        bd.wall_time = float(hours)
+        return FleetReport(
+            breakdown=bd,
+            router=stats,
+            revocations=revocations,
+            repairs=repairs,
+            migrated_bytes=migrated,
+            restored_bytes=restored,
+            replicas_provisioned=n_provisioned,
+            markets_used=markets_used,
+            capacity_tokens_per_sec=plan.capacity_tokens_per_sec,
+            relaxed_correlation=plan.relaxed_correlation,
+        )
+
+
+def on_demand_reference(
+    workload: ServingWorkload,
+    feats: alg.MarketFeatures,
+    future: MarketSet,
+    hours: float,
+    rate_tokens_per_sec: Sequence[float],
+    policy: ServePolicy,
+    overheads: OverheadModel = OverheadModel(),
+) -> FleetReport:
+    """The on-demand baseline: replicas on the fitting shape with the best
+    on-demand $ per delivered token, no revocations ever, billed at the
+    sticker price for the whole window. The availability bar the fleet
+    policy must match at lower cost."""
+    job = Job(length_hours=policy.slo_horizon_hours, memory_gb=workload.state_gb)
+    fit = alg.find_suitable_servers(job, feats)
+    if not fit:
+        raise ValueError("on-demand: no shape fits the replica")
+    best = min(
+        fit,
+        key=lambda i: (
+            float(feats.on_demand[i])
+            / max(
+                replica_rate(workload, feats, Allocation.single(i, 1)), 1e-9
+            ),
+            i,
+        ),
+    )
+    alloc = Allocation.single(best, int(feats.device_count[best]))
+    rate = replica_rate(workload, feats, alloc)
+    target = workload.target_tokens_per_sec * policy.capacity_headroom
+    k = max(int(math.ceil(target / max(rate, 1e-9))), 1)
+    bd = Breakdown()
+    od_price = float(feats.on_demand[best])
+    for _ in range(k):
+        s = Session(best, 0.0)
+        s.add("startup", overheads.startup_hours)
+        s.add("execution", max(hours - overheads.startup_hours, 0.0))
+        bill_session(s, lambda m, h: od_price, bd)
+    stats = route_trace(
+        rate_tokens_per_sec,
+        [CapacityEvent(0.0, 0.0), CapacityEvent(overheads.startup_hours, k * rate)],
+        max_delay_seconds=policy.max_delay_seconds,
+        shed_delay_seconds=policy.shed_delay_seconds,
+        hours=hours,
+    )
+    stats.merge_into(bd)
+    bd.wall_time = float(hours)
+    return FleetReport(
+        breakdown=bd,
+        router=stats,
+        revocations=0,
+        repairs=0,
+        migrated_bytes=0,
+        restored_bytes=0,
+        replicas_provisioned=k,
+        markets_used=[best] * k,
+        capacity_tokens_per_sec=k * rate,
+    )

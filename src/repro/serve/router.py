@@ -1,0 +1,205 @@
+"""Deterministic open-loop request router for a serving fleet.
+
+The router is the DEMAND side of the serving subsystem: an open-loop
+request trace (tokens/sec offered per wall interval — requests never slow
+down because the fleet is struggling, which is what makes the accounting
+honest) drains through whatever aggregate capacity the live replicas
+provide. Everything is closed-form over piecewise-constant intervals, so
+the same trace always produces bit-identical token and SLO accounting —
+the serving analogue of the seeded price traces the batch simulator runs
+on.
+
+Queue model over one interval of ``seconds`` with constant offered rate
+``a`` (tokens/s) and constant fleet capacity ``c`` (tokens/s):
+
+* the backlog evolves linearly, ``q(t) = q0 + (a - c)·t``, floored at 0;
+* **SLO violation** — the estimated queueing delay is ``q(t) / c``; every
+  second where it exceeds ``max_delay_seconds`` is an SLO-violation
+  second (capacity 0 with any demand is a violation outright). The
+  crossing times of the linear backlog are solved exactly.
+* **shedding** — clients abandon after ``shed_delay_seconds``: the
+  backlog is capped at ``c × shed_delay`` and every token that would
+  grow it past the cap is shed (with zero capacity the cap is zero —
+  everything offered is shed). Shed tokens are *lost demand*, the
+  serving analogue of the batch simulator's lost work.
+* **queued token·seconds** — the exact integral of the backlog over the
+  interval (trapezoids between crossing points), the Little's-law
+  numerator for mean latency.
+
+Token conservation holds exactly per interval and is pinned by tests:
+``q0 + offered == served + shed + q_end``.
+
+The counters land on :class:`repro.core.accounting.Breakdown` as
+first-class components: the violation clock in ``time["slo_violation"]``,
+the token volumes in ``served_tokens`` / ``shed_tokens`` /
+``queued_token_seconds``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.accounting import Breakdown
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Token/SLO accounting over routed intervals (all exact sums)."""
+
+    offered_tokens: float = 0.0
+    served_tokens: float = 0.0
+    shed_tokens: float = 0.0
+    queued_token_seconds: float = 0.0
+    slo_violation_seconds: float = 0.0
+
+    def add(self, other: "RouterStats") -> "RouterStats":
+        self.offered_tokens += other.offered_tokens
+        self.served_tokens += other.served_tokens
+        self.shed_tokens += other.shed_tokens
+        self.queued_token_seconds += other.queued_token_seconds
+        self.slo_violation_seconds += other.slo_violation_seconds
+        return self
+
+    def merge_into(self, bd: Breakdown) -> None:
+        """Land the counters on the shared Breakdown: the violation clock
+        as a first-class time component (hours, like every other clock),
+        the token volumes on the serving counter fields."""
+        bd.time["slo_violation"] += self.slo_violation_seconds / 3600.0
+        bd.served_tokens += self.served_tokens
+        bd.shed_tokens += self.shed_tokens
+        bd.queued_token_seconds += self.queued_token_seconds
+
+
+def drain_interval(
+    queue_tokens: float,
+    offered_tokens_per_sec: float,
+    capacity_tokens_per_sec: float,
+    seconds: float,
+    *,
+    max_delay_seconds: float,
+    shed_delay_seconds: float,
+) -> Tuple[float, RouterStats]:
+    """Route one piecewise-constant interval; returns (backlog after,
+    stats). Closed form — no time discretization, so interval splitting is
+    associative: routing [0, T] equals routing [0, s] then [s, T].
+    """
+    a = max(float(offered_tokens_per_sec), 0.0)
+    c = max(float(capacity_tokens_per_sec), 0.0)
+    T = float(seconds)
+    q0 = max(float(queue_tokens), 0.0)
+    if T <= 0:
+        return q0, RouterStats()
+    stats = RouterStats(offered_tokens=a * T)
+
+    cap = c * float(shed_delay_seconds)
+    slo_q = c * float(max_delay_seconds)
+
+    # tokens already waiting past the abandonment bound shed immediately
+    # (capacity just dropped under the backlog's feet)
+    q = min(q0, cap)
+    stats.shed_tokens += q0 - q
+
+    if c <= 0.0:
+        # no live capacity: cap is 0, every offered token sheds, and any
+        # demand at all is out-of-SLO for the whole interval
+        stats.shed_tokens += a * T
+        if a > 0.0 or q0 > 0.0:
+            stats.slo_violation_seconds += T
+        return 0.0, stats
+
+    net = a - c
+    if net > 0.0 and q + net * T > cap:
+        # backlog hits the abandonment cap at t_cap and rides it, shedding
+        # the net inflow from then on
+        t_cap = (cap - q) / net
+        stats.shed_tokens += net * (T - t_cap)
+        segs = _linear_segments(q, net, t_cap) + [(T - t_cap, cap, cap)]
+    else:
+        segs = _linear_segments(q, net, T)
+
+    q_end = segs[-1][2]
+    for dur, qa, qb in segs:
+        stats.queued_token_seconds += 0.5 * (qa + qb) * dur
+        stats.slo_violation_seconds += _time_above(qa, qb, dur, slo_q)
+    # conservation: served = inflow - shed - backlog growth (exact)
+    stats.served_tokens = q0 + a * T - stats.shed_tokens - q_end
+    return q_end, stats
+
+
+def _linear_segments(
+    q0: float, net: float, T: float
+) -> List[Tuple[float, float, float]]:
+    """Split a linear backlog q(t) = q0 + net·t (floored at 0) over [0, T]
+    into (duration, q_start, q_end) pieces where it is exactly linear."""
+    if T <= 0:
+        return [(0.0, q0, q0)]
+    if net < 0.0 and q0 + net * T < 0.0:
+        t_empty = q0 / -net
+        return [(t_empty, q0, 0.0), (T - t_empty, 0.0, 0.0)]
+    return [(T, q0, q0 + net * T)]
+
+
+def _time_above(qa: float, qb: float, dur: float, threshold: float) -> float:
+    """Seconds a linear segment from qa to qb (over ``dur`` s) spends
+    strictly above ``threshold``."""
+    if dur <= 0:
+        return 0.0
+    above_a, above_b = qa > threshold, qb > threshold
+    if above_a and above_b:
+        return dur
+    if not above_a and not above_b:
+        return 0.0
+    t_cross = dur * (threshold - qa) / (qb - qa)
+    return dur - t_cross if above_b else t_cross
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityEvent:
+    """Fleet capacity from ``at_hours`` (wall) onward, tokens/sec."""
+
+    at_hours: float
+    tokens_per_sec: float
+
+
+def route_trace(
+    rate_tokens_per_sec: Sequence[float],
+    capacity_events: Iterable[CapacityEvent],
+    *,
+    max_delay_seconds: float,
+    shed_delay_seconds: float,
+    hours: Optional[float] = None,
+) -> RouterStats:
+    """Drain an hourly offered-rate trace through a piecewise-constant
+    capacity timeline. ``rate_tokens_per_sec[h]`` is the offered rate over
+    wall hour ``[h, h+1)``; ``capacity_events`` is a sorted (by time)
+    sequence of capacity changes, the first at hour 0. Intervals are split
+    at every hour mark and capacity change — closed-form inside each.
+    """
+    events = sorted(capacity_events, key=lambda e: e.at_hours)
+    assert events and events[0].at_hours <= 0.0, "capacity at t=0 required"
+    end = float(hours if hours is not None else len(rate_tokens_per_sec))
+    # all boundaries: hour marks + event times
+    marks = sorted(
+        {float(h) for h in range(int(end) + 1)}
+        | {e.at_hours for e in events if 0.0 < e.at_hours < end}
+        | {end}
+    )
+    cap_i = 0
+    stats = RouterStats()
+    q = 0.0
+    for t0, t1 in zip(marks, marks[1:]):
+        if t1 <= t0:
+            continue
+        while cap_i + 1 < len(events) and events[cap_i + 1].at_hours <= t0 + 1e-12:
+            cap_i += 1
+        rate_idx = min(int(t0), len(rate_tokens_per_sec) - 1)
+        q, s = drain_interval(
+            q,
+            float(rate_tokens_per_sec[rate_idx]),
+            events[cap_i].tokens_per_sec,
+            (t1 - t0) * 3600.0,
+            max_delay_seconds=max_delay_seconds,
+            shed_delay_seconds=shed_delay_seconds,
+        )
+        stats.add(s)
+    return stats

@@ -87,6 +87,92 @@ def test_legacy_csv_without_topology_columns(tmp_path):
     assert loaded.prices.shape == (1, 2)
 
 
+def test_staggered_anchors_match_legacy_when_aligned():
+    """leg_anchors == session start with every leg released is EXACTLY the
+    legacy aligned-cycle billing (the bit-exactness escape hatch)."""
+    for durs in ([0.4], [0.7, 0.9], [1.0], [2.5, 0.25]):
+        legacy, staggered = Breakdown(), Breakdown()
+        for bd, anchored in ((legacy, False), (staggered, True)):
+            s = Session(
+                0, 3.25, legs=(0, 1),
+                leg_anchors=(3.25, 3.25) if anchored else None,
+                leg_releases=(True, True) if anchored else None,
+            )
+            for d in durs:
+                s.add("execution", d)
+            bill_session(s, lambda m, h: 2.0 if m else 1.0, bd)
+        assert legacy.total_cost == staggered.total_cost
+        assert legacy.leg_cost == staggered.leg_cost
+
+
+def test_mid_cycle_one_leg_repair_bills_only_that_legs_partial_hour():
+    """THE staggering scenario, pinned: allocation (A=0, B=1) loses B at
+    wall 0.4; A's cycle stays open (no buffer at the boundary), the repair
+    session (A, C=2) runs 0.6 h more and releases everything. Flat $1/h on
+    every market so the dollars ARE the hours:
+
+    * B: 0.4 h used + 0.6 h buffer (its own partial hour)  = 1.0
+    * A: 1.0 h used + 0 buffer (cycle closes exactly at 1.0) = 1.0
+    * C: 0.6 h used + 0.4 h buffer (anchored at 0.4)         = 1.0
+
+    Legacy aligned billing would charge A 2.0 (0.4 + 0.6 buffer at the
+    revocation, then a fresh 0.6 + 0.4-buffer cycle): the repair no longer
+    restarts the surviving leg's cycle. sum(leg_cost) == total_cost holds
+    exactly.
+    """
+    bd = Breakdown()
+    price = lambda m, h: 1.0
+    s1 = Session(
+        0, 0.0, legs=(0, 1),
+        leg_anchors=(0.0, 0.0),
+        leg_releases=(False, True),  # B revoked; A's occupancy continues
+    )
+    s1.add("execution", 0.4)
+    bill_session(s1, price, bd)
+    s2 = Session(
+        0, 0.4, legs=(0, 2),
+        leg_anchors=(0.0, 0.4),      # A keeps its anchor; C starts fresh
+        leg_releases=(True, True),
+    )
+    s2.add("execution", 0.6)
+    bill_session(s2, price, bd)
+    assert bd.leg_cost[0] == pytest.approx(1.0, abs=1e-12)
+    assert bd.leg_cost[1] == pytest.approx(1.0, abs=1e-12)
+    assert bd.leg_cost[2] == pytest.approx(1.0, abs=1e-12)
+    assert sum(bd.leg_cost.values()) == bd.total_cost  # exact decomposition
+    assert bd.cost["billing_buffer"] == pytest.approx(1.0, abs=1e-12)
+
+    # legacy aligned cycles on the same trajectory: A pays the extra
+    # mid-cycle buffer restart — staggering is strictly cheaper
+    legacy = Breakdown()
+    l1 = Session(0, 0.0, legs=(0, 1))
+    l1.add("execution", 0.4)
+    bill_session(l1, price, legacy)
+    l2 = Session(0, 0.4, legs=(0, 2))
+    l2.add("execution", 0.6)
+    bill_session(l2, price, legacy)
+    assert legacy.leg_cost[0] == pytest.approx(2.0)
+    assert legacy.total_cost > bd.total_cost
+
+
+def test_settle_leg_closes_deferred_cycle():
+    """A deferred leg whose allocation drops it settles its final partial
+    cycle standalone — and lands in leg_cost so the decomposition stays
+    exact."""
+    from repro.core.accounting import settle_leg
+
+    bd = Breakdown()
+    s = Session(0, 0.0, legs=(0, 1), leg_anchors=(0.0, 0.0),
+                leg_releases=(True, False))
+    s.add("execution", 0.25)
+    bill_session(s, lambda m, h: 1.0, bd)
+    # leg 1 deferred; its occupancy ended at 0.25 and nothing reuses it
+    paid = settle_leg(bd, 1, 0.0, 0.25, lambda m, h: 1.0)
+    assert paid == pytest.approx(0.75)
+    assert bd.leg_cost[1] == pytest.approx(1.0)
+    assert sum(bd.leg_cost.values()) == pytest.approx(bd.total_cost)
+
+
 def test_reshard_component_sums_into_totals():
     """The new ``reshard`` component is a first-class billing citizen: it
     lands in Breakdown.time/cost and sums into total_time/total_cost."""

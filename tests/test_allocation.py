@@ -372,3 +372,95 @@ def test_simulator_raises_when_nothing_fits():
     sim = Simulator(hist, fut, seed=0)
     with pytest.raises(ValueError, match="fits no allocation"):
         sim.run_job(Job(24, 10_000.0), SiwoftPolicy())  # > 2 x 320 GB
+
+
+# --- 3-leg splits behind max_legs=3 + the pairwise correlation budget -------
+
+def _three_leg_feats(corr_pairs=()):
+    """Five 40 GB-total markets (8 dev × 5 GB): no single shape and no PAIR
+    fits a 100 GB job — only triples do. ``corr_pairs`` lists (i, j) whose
+    co-revocation is pushed above any reasonable budget."""
+    n = 5
+    corr = np.eye(n)
+    for i, j in corr_pairs:
+        corr[i, j] = corr[j, i] = 0.9
+    return MarketFeatures(
+        mttr=np.full(n, 400.0),
+        corr=corr,
+        memory_gb=np.full(n, 5.0),
+        on_demand=np.full(n, 1.0),
+        avg_price=np.full(n, 0.3),
+        device_count=np.full(n, 8.0),
+        interconnect_gbps=np.full(n, 50.0),
+        throughput=np.array([shape_throughput(8, 50.0)] * n),
+    )
+
+
+def test_three_leg_split_gated_behind_max_legs():
+    """max_legs=2 (the default) cannot provision the triple-only job; the
+    SAME features open up behind max_legs=3 — and every admitted split has
+    exactly 3 legs (a fitting split never grows extra legs)."""
+    feats = _three_leg_feats()
+    job = Job(24.0, 100.0)
+    assert alg.find_suitable_allocations(job, feats, SiwoftPolicy()) == []
+    allocs = alg.find_suitable_allocations(job, feats, SiwoftPolicy(max_legs=3))
+    assert allocs and all(len(a) == 3 for a in allocs)
+
+
+def test_three_leg_pairwise_correlation_budget():
+    """A 3-leg candidate is admitted only when ALL THREE pairs co-revoke
+    below the budget: markets 1–3 are correlated, so every admitted triple
+    avoids holding both."""
+    feats = _three_leg_feats(corr_pairs=[(1, 3)])
+    job = Job(24.0, 100.0)
+    policy = SiwoftPolicy(max_legs=3)  # budget defaults to the 0.2 threshold
+    allocs = alg.find_suitable_allocations(job, feats, policy)
+    assert allocs
+    for a in allocs:
+        assert not ({1, 3} <= set(a.markets)), a.markets
+        for x in a.markets:
+            for y in a.markets:
+                if x != y:
+                    assert feats.corr[x, y] < policy.split_corr_cut
+
+
+def test_split_correlation_budget_independent_of_step13_threshold():
+    """The split budget is its own knob: a loose step-13 threshold (0.95)
+    with a tight split budget still refuses the correlated pair — and
+    vice versa a loose budget admits it."""
+    feats = _three_leg_feats(corr_pairs=[(1, 3)])
+    job = Job(24.0, 100.0)
+    tight = SiwoftPolicy(
+        max_legs=3, correlation_threshold=0.95, split_correlation_budget=0.2
+    )
+    for a in alg.find_suitable_allocations(job, feats, tight):
+        assert not ({1, 3} <= set(a.markets)), a.markets
+    loose = SiwoftPolicy(
+        max_legs=3, correlation_threshold=0.2, split_correlation_budget=0.95
+    )
+    assert any(
+        {1, 3} <= set(a.markets)
+        for a in alg.find_suitable_allocations(job, feats, loose)
+    )
+
+
+def test_three_leg_mttr_composes_as_min():
+    """Admission stays honest at 3 legs: the allocation's lifetime is the
+    MIN over its legs, so one weak leg disqualifies the whole triple."""
+    feats = _three_leg_feats()
+    feats.mttr[2] = 4.0  # weak leg: below 2 x the ~2.9 h wall on a triple
+    job = Job(24.0, 100.0)
+    policy = SiwoftPolicy(max_legs=3)
+    allocs = alg.find_suitable_allocations(job, feats, policy)
+    lifetimes = alg.compute_allocation_lifetimes(feats, allocs)
+    for a, lt in lifetimes.items():
+        assert lt == min(feats.mttr[m] for m in a.markets)
+    # Alg.-1 admission (MTTR >= 2 x wall on the shape) rejects every triple
+    # holding the weak leg; the survivors only draw from {0, 1, 3, 4}
+    S = alg.server_based_lifetime(job, lifetimes, policy, feats)
+    admitted = [
+        a for a in S
+        if lifetimes[a] >= policy.lifetime_factor
+        * alg.allocation_wall_hours(job.length_hours, feats, a)
+    ]
+    assert admitted and all(2 not in a.markets for a in admitted)

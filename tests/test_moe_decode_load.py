@@ -1,0 +1,126 @@
+"""Regression pin: batched MoE decode's residual CROSS-SEQUENCE
+buffer-overflow drop under mixed-length sequences.
+
+``moe_decode_block`` replays the teacher-forced keep/drop decision from
+the per-sequence ``moe_load`` counters (forward-consistent capacity), but
+still packs all B decode tokens into ONE global scatter group with a
+static capacity ``c_pack = ceil(K·cf·B/E)`` per expert. When more than
+``c_pack`` counter-KEPT sequences route to the same expert in one step,
+the overflow is dropped — a deviation from the per-sequence forward that
+per-sequence packing groups would remove (ROADMAP open item). These tests
+pin today's exact behavior so the future packing fix has a baseline to
+beat: the counter semantics it must preserve, and the cross-sequence drop
+it must remove.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.models import moe
+from repro.models.common import init_params
+
+
+@pytest.fixture(scope="module")
+def tiny_moe():
+    """Mixtral MoE block forced to top-1 routing with every token sent to
+    expert 0 (router column 0 dominates for any non-negative input) —
+    deterministic expert contention on demand."""
+    cfg = get_arch("mixtral-8x7b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, top_k=1, capacity_factor=1.0)
+    )
+    params = init_params(moe.moe_spec(cfg), jax.random.key(0))
+    router = jnp.zeros((cfg.d_model, cfg.moe.num_experts), jnp.float32)
+    params = dict(params, router=router.at[:, 0].set(1.0))
+    return cfg, params
+
+
+def _decode(cfg, params, x, load, pos):
+    out, new_load = moe.moe_decode_block(
+        params, x, jnp.asarray(load, jnp.int32), jnp.int32(pos), cfg
+    )
+    return np.asarray(out, np.float32), np.asarray(new_load)
+
+
+def test_counters_count_kept_and_dropped(tiny_moe):
+    """``moe_load`` carries the forward's cumsum arrival positions: EVERY
+    assignment increments it, buffer-dropped ones included."""
+    cfg, params = tiny_moe
+    E = cfg.moe.num_experts
+    B = 4
+    x = jnp.ones((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    _, new_load = _decode(cfg, params, x, np.zeros((B, E)), pos=8)
+    # all B sequences routed expert 0 once — counted even though c_pack =
+    # ceil(1·1.0·4/E) = 1 kept only one of them in the buffer
+    np.testing.assert_array_equal(new_load[:, 0], np.ones(B))
+    np.testing.assert_array_equal(new_load[:, 1:], np.zeros((B, E - 1)))
+
+
+def test_cross_sequence_overflow_drop_pinned(tiny_moe):
+    """THE residual deviation, pinned: under contention the first sequence
+    (scatter order) matches its single-sequence decode bit-for-bit, the
+    overflow sequences are dropped to the residual (zero block output)
+    even though their single-sequence decode is nonzero."""
+    cfg, params = tiny_moe
+    E = cfg.moe.num_experts  # reduced() caps at 4
+    B = 4  # c_pack = ceil(1 * 1.0 * 4 / 4) = 1 slot for expert 0
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    x = jnp.abs(x)  # keep router logit for expert 0 positive/dominant
+    pos = 8  # c_seq = floor(1 * 1.0 * 9 / 4) = 2: counters keep all (load 0)
+
+    batched, _ = _decode(cfg, params, x, np.zeros((B, E)), pos)
+    singles = np.concatenate(
+        [
+            _decode(cfg, params, x[b : b + 1], np.zeros((1, E)), pos)[0]
+            for b in range(B)
+        ],
+        axis=0,
+    )
+    # every sequence alone is served by the expert (nonzero output)
+    assert np.abs(singles).max(axis=(1, 2)).min() > 0
+    # batched: exactly one buffer slot -> sequence 0 is bit-identical to
+    # its solo decode, sequences 1..3 are buffer-overflow-dropped to zero
+    np.testing.assert_array_equal(batched[0], singles[0])
+    np.testing.assert_array_equal(batched[1:], np.zeros_like(batched[1:]))
+
+
+def test_mixed_length_counter_drop_is_forward_consistent(tiny_moe):
+    """Mixed-length batch: a LONG sequence whose counters already reached
+    the forward's capacity is counter-dropped (correct, forward-consistent)
+    and consumes NO buffer slot — so a short sequence behind it in scatter
+    order is served. Pins that the two drop mechanisms compose: counters
+    first (exact), packing second (the residual deviation)."""
+    cfg, params = tiny_moe
+    E = cfg.moe.num_experts
+    B = 4
+    key = jax.random.key(2)
+    x = jnp.abs(jax.random.normal(key, (B, 1, cfg.d_model), jnp.dtype(cfg.dtype)))
+    pos = 8  # c_seq = floor(1 * 1.0 * 9 / 4) = 2
+    # sequence 0 is "long": it already routed 2 assignments to expert 0
+    # (arrival position 2 ≥ c_seq -> the forward would drop this token);
+    # sequences 1..3 are "short" (load 0 -> counters keep them)
+    load = np.zeros((B, E))
+    load[0, 0] = 2
+    batched, new_load = _decode(cfg, params, x, load, pos)
+    singles = [
+        _decode(cfg, params, x[b : b + 1], load[b : b + 1], pos)[0]
+        for b in range(B)
+    ]
+    # the long sequence: counter-dropped in batch AND solo — bit-identical
+    # zero both ways (this is the forward-consistent path, not a bug)
+    np.testing.assert_array_equal(batched[0], np.zeros_like(batched[0]))
+    np.testing.assert_array_equal(singles[0][0], np.zeros_like(singles[0][0]))
+    # it consumed no slot: the FIRST short sequence is served exactly
+    np.testing.assert_array_equal(batched[1], singles[1][0])
+    # the remaining short sequences overflow the single slot: dropped in
+    # the batch, served solo — the pinned cross-sequence deviation
+    np.testing.assert_array_equal(batched[2:], np.zeros_like(batched[2:]))
+    for b in (2, 3):
+        assert np.abs(singles[b]).max() > 0
+    # counters advanced for every sequence regardless of drops
+    np.testing.assert_array_equal(new_load[:, 0], load[:, 0] + 1)

@@ -1,0 +1,353 @@
+"""Serving-fleet subsystem: router conservation laws, SLO-horizon
+admission, correlation spread, migration byte invariants, and the
+trace-driven fleet simulator end-to-end (revocation → params-only
+migration → re-route → repair)."""
+import numpy as np
+import pytest
+
+from repro.core import generate_markets, split_history_future
+from repro.core import provisioner as alg
+from repro.core.market import Market, MarketSet
+from repro.serve import (
+    CapacityEvent,
+    FleetSimulator,
+    ServePolicy,
+    ServingWorkload,
+    drain_interval,
+    migration_cost,
+    on_demand_reference,
+    provision_fleet,
+    repair_fleet,
+    replica_rate,
+    route_trace,
+)
+
+from hypothesis import given, settings, strategies as st
+
+
+# --- router: the deterministic open-loop queue ------------------------------
+
+@given(
+    q0=st.floats(0, 5000),
+    a=st.floats(0, 500),
+    c=st.floats(0, 500),
+    T=st.floats(1, 7200),
+)
+@settings(max_examples=80, deadline=None)
+def test_router_token_conservation(q0, a, c, T):
+    """q0 + offered == served + shed + q_end, exactly — nothing invents or
+    loses tokens whatever the rates."""
+    q_end, s = drain_interval(
+        q0, a, c, T, max_delay_seconds=30.0, shed_delay_seconds=120.0
+    )
+    inflow = q0 + s.offered_tokens
+    outflow = s.served_tokens + s.shed_tokens + q_end
+    assert inflow == pytest.approx(outflow, rel=1e-9, abs=1e-6)
+    assert s.served_tokens >= -1e-9 and s.shed_tokens >= -1e-9
+    assert 0 <= s.slo_violation_seconds <= T + 1e-9
+
+
+def test_router_interval_splitting_is_associative():
+    """Routing [0, T] equals routing [0, s] then [s, T] — the closed form
+    has no discretization error, so capacity events can split intervals
+    anywhere."""
+    kw = dict(max_delay_seconds=30.0, shed_delay_seconds=120.0)
+    q1, s1 = drain_interval(100.0, 80.0, 50.0, 900.0, **kw)
+    qa, sa = drain_interval(100.0, 80.0, 50.0, 333.0, **kw)
+    qb, sb = drain_interval(qa, 80.0, 50.0, 900.0 - 333.0, **kw)
+    assert q1 == pytest.approx(qb, rel=1e-12)
+    assert s1.served_tokens == pytest.approx(sa.served_tokens + sb.served_tokens, rel=1e-9)
+    assert s1.shed_tokens == pytest.approx(sa.shed_tokens + sb.shed_tokens, rel=1e-9)
+    assert s1.queued_token_seconds == pytest.approx(
+        sa.queued_token_seconds + sb.queued_token_seconds, rel=1e-9
+    )
+    assert s1.slo_violation_seconds == pytest.approx(
+        sa.slo_violation_seconds + sb.slo_violation_seconds, rel=1e-9
+    )
+
+
+def test_router_slo_and_shed_semantics():
+    # zero capacity + any demand: full-interval violation, everything shed
+    q, s = drain_interval(50.0, 10.0, 0.0, 600.0,
+                          max_delay_seconds=30.0, shed_delay_seconds=120.0)
+    assert q == 0.0
+    assert s.slo_violation_seconds == 600.0
+    assert s.shed_tokens == pytest.approx(50.0 + 10.0 * 600.0)
+    # capacity above demand, empty queue: no violation, no shedding
+    q, s = drain_interval(0.0, 10.0, 20.0, 600.0,
+                          max_delay_seconds=30.0, shed_delay_seconds=120.0)
+    assert q == 0.0 and s.shed_tokens == 0.0 and s.slo_violation_seconds == 0.0
+    assert s.served_tokens == pytest.approx(6000.0)
+    # overload: the backlog rides the abandonment cap, delay sits above
+    # the SLO bound -> violation seconds accrue after the crossing
+    q, s = drain_interval(0.0, 30.0, 10.0, 600.0,
+                          max_delay_seconds=30.0, shed_delay_seconds=60.0)
+    assert q == pytest.approx(10.0 * 60.0)  # c * shed_delay
+    assert s.shed_tokens > 0
+    # backlog passes c*max_delay = 300 tokens at t = 15 s (net 20 tok/s)
+    assert s.slo_violation_seconds == pytest.approx(600.0 - 15.0)
+
+
+def test_route_trace_capacity_dip_accrues_violation():
+    """A mid-trace capacity dip below the offered rate shows up as SLO
+    violation seconds and queued token-time; full recovery drains it."""
+    rate = [100.0] * 4
+    events = [
+        CapacityEvent(0.0, 150.0),
+        CapacityEvent(1.0, 50.0),    # partial outage for 0.1 h
+        CapacityEvent(1.1, 150.0),
+    ]
+    s = route_trace(rate, events, max_delay_seconds=30.0,
+                    shed_delay_seconds=3600.0, hours=4.0)
+    assert s.slo_violation_seconds > 0
+    assert s.queued_token_seconds > 0
+    assert s.shed_tokens == 0.0  # backlog stayed under the abandonment cap
+    assert s.served_tokens == pytest.approx(s.offered_tokens, rel=1e-9)
+    # and with no dip there is no violation at all
+    s2 = route_trace(rate, [CapacityEvent(0.0, 150.0)],
+                     max_delay_seconds=30.0, shed_delay_seconds=3600.0,
+                     hours=4.0)
+    assert s2.slo_violation_seconds == 0.0
+    assert s2.served_tokens == pytest.approx(100.0 * 4 * 3600.0)
+
+
+# --- migration: params-only invariant ---------------------------------------
+
+def test_migration_cost_params_only_strictly_below_train_path():
+    mc = migration_cost(
+        param_bytes=1000, cache_bytes=500, cache_policy="drop", dcn_gbps=2.5,
+        inflight_context_tokens=1000.0, prefill_tokens_per_sec=100.0,
+    )
+    assert mc.moved_bytes == 1000 < mc.train_path_bytes == 3000
+    assert mc.cache_bytes == 0 and mc.recompute_hours > 0
+    assert mc.restore_bytes == 1500  # params + cache through storage
+    mc2 = migration_cost(
+        param_bytes=1000, cache_bytes=500, cache_policy="migrate", dcn_gbps=2.5,
+    )
+    assert mc2.moved_bytes == 1500 < mc2.train_path_bytes
+    assert mc2.recompute_hours == 0.0 and mc2.wire_hours > mc.wire_hours
+    # the params-only invariant is about the PARAMS leg: a huge-batch KV
+    # cache under "migrate" may legitimately exceed 2x params and is
+    # billed for what it is, not asserted away (regression: this raised)
+    big = migration_cost(
+        param_bytes=1000, cache_bytes=25_000, cache_policy="migrate",
+        dcn_gbps=2.5,
+    )
+    assert big.moved_bytes == 26_000 > big.train_path_bytes
+    assert big.params_bytes < big.train_path_bytes
+
+
+def test_serve_state_bytes_smaller_than_train_state():
+    """The serving footprint (params + KV cache) is strictly below the
+    training footprint (params + 2 Adam moments) at serving-scale
+    batch/context — the byte-level reason replica migration is cheap."""
+    from repro.config import get_arch
+    from repro.dist import serve_state_bytes, train_state_bytes
+    from repro.models import build_model
+    from repro.models.common import param_bytes
+
+    model = build_model(get_arch("qwen3-4b").reduced())
+    sb = serve_state_bytes(model, batch=4, seq_len=128)
+    assert param_bytes(model.specs) < sb < train_state_bytes(model)
+    # int8 cache shrinks the footprint, never grows it
+    assert serve_state_bytes(model, batch=4, seq_len=128, int8_cache=True) <= sb
+
+
+# --- fleet provisioning -----------------------------------------------------
+
+def _serve_setup(seed=4):
+    ms = generate_markets(seed=seed, n_hours=24 * 90 + 24 * 14)
+    hist, fut = split_history_future(ms, 24 * 90)
+    feats = alg.MarketFeatures.from_history(hist)
+    wl = ServingWorkload(
+        target_tokens_per_sec=400.0,
+        replica_tokens_per_sec=100.0,
+        state_gb=20.0,
+        param_bytes=200_000_000,
+        cache_bytes=40_000_000,
+    )
+    return hist, fut, feats, wl
+
+
+def test_fleet_admission_uses_slo_horizon_not_wall_time():
+    """Admission compares MTTR against lifetime_factor × the rolling SLO
+    horizon — every admitted replica market passes that bar even though a
+    serving 'job' has no length."""
+    _, _, feats, wl = _serve_setup()
+    policy = ServePolicy(slo_horizon_hours=24.0, lifetime_factor=2.0)
+    plan = provision_fleet(wl, feats, policy)
+    assert plan.capacity_tokens_per_sec >= wl.target_tokens_per_sec
+    for r in plan.replicas:
+        assert alg.allocation_mttr(r.allocation, feats) >= 48.0
+    # a horizon no market can dominate falls back (best effort) instead of
+    # refusing to serve — Alg. 1's fallback discipline
+    impossible = ServePolicy(slo_horizon_hours=1e6)
+    assert provision_fleet(wl, feats, impossible).replicas
+
+
+def test_fleet_spreads_across_low_correlation_markets():
+    _, _, feats, wl = _serve_setup()
+    policy = ServePolicy()
+    plan = provision_fleet(wl, feats, policy)
+    ms = plan.markets
+    assert len(set(ms)) == len(ms)  # one spot request per market
+    if not plan.relaxed_correlation:
+        for i in ms:
+            for j in ms:
+                if i != j:
+                    assert feats.corr[i, j] < policy.correlation_threshold
+
+
+def test_repair_prefers_same_shape_and_avoids_correlated():
+    _, _, feats, wl = _serve_setup()
+    policy = ServePolicy()
+    plan = provision_fleet(wl, feats, policy)
+    lost = plan.replicas[0]
+    survivors = [m for r in plan.replicas[1:] for m in r.allocation.markets]
+    rev = lost.allocation.markets[0]
+    rep = repair_fleet(
+        wl, feats, policy, revoked_market=rev, survivors=survivors,
+        exclude={rev}, lost=lost,
+    )
+    assert rep is not None
+    assert rep.allocation.markets[0] != rev
+    assert not any(m in survivors for m in rep.allocation.markets)
+    assert rep.allocation.device_counts == lost.allocation.device_counts
+    for s in survivors:
+        for m in rep.allocation.markets:
+            assert feats.corr[s, m] < policy.correlation_threshold
+
+
+# --- the fleet simulator end-to-end -----------------------------------------
+
+def _hand_markets():
+    """Four 4-device markets in distinct regions: A, B, D calm over the
+    history; C revokes every 45 h (admitted at a 12 h horizon, ranked
+    last). In the future window B revokes at hour 6 — the trace surprise
+    the fleet must absorb."""
+    mk = [
+        Market(0, "g4.a", "us-east-1", "us-east-1a", 10, 1.0,
+               device_count=4, interconnect_gbps=25.0),
+        Market(1, "g4.b", "eu-west-1", "eu-west-1a", 10, 1.0,
+               device_count=4, interconnect_gbps=25.0),
+        Market(2, "g4.c", "ap-southeast-1", "ap-southeast-1a", 10, 1.0,
+               device_count=4, interconnect_gbps=25.0),
+        Market(3, "g4.d", "eu-central-1", "eu-central-1a", 10, 1.0,
+               device_count=4, interconnect_gbps=25.0),
+    ]
+    H = 24 * 90
+    hp = np.full((4, H), 0.35)
+    hp[2, ::45] = 1.5
+    F = 48
+    fp = np.full((4, F), 0.35)
+    fp[1, 6:8] = 1.5
+    return MarketSet(mk, hp), MarketSet(mk, fp, start_hour=H)
+
+
+def _hand_workload():
+    return ServingWorkload(
+        target_tokens_per_sec=500.0,
+        replica_tokens_per_sec=100.0,   # 4-dev replica ≈ 325 tok/s
+        state_gb=30.0,
+        param_bytes=120_000_000,
+        cache_bytes=30_000_000,
+        inflight_context_tokens=2048.0,
+    )
+
+
+def test_fleet_simulator_revocation_migration_reroute_repair():
+    hist, fut, = _hand_markets()
+    wl = _hand_workload()
+    policy = ServePolicy(slo_horizon_hours=12.0, capacity_headroom=1.4)
+    rate = np.full(48, 400.0)
+    rate[0] = 0.0  # cold start: no demand while the fleet boots
+    rep = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+
+    # B revoked at hour 6; the fleet repaired with a params-only migration
+    assert rep.revocations == 1 and rep.repairs == 1
+    assert rep.migrated_bytes == wl.param_bytes  # drop policy: params only
+    assert rep.migrated_bytes < 3 * wl.param_bytes
+    assert rep.restored_bytes == 0
+    # the replacement avoided the revoked market and every survivor
+    markets = rep.markets_used
+    assert markets.count(1) == 1
+    # during the outage the survivors absorbed the load: served tokens
+    # stay near the offer, nothing shed, violations bounded by the dip
+    assert rep.router.shed_tokens == 0.0
+    assert rep.router.served_tokens == pytest.approx(
+        rep.router.offered_tokens, rel=1e-6
+    )
+    # per-leg decomposition stays exact through staggered anchors
+    bd = rep.breakdown
+    assert sum(bd.leg_cost.values()) == pytest.approx(bd.total_cost, rel=1e-12)
+    assert bd.served_tokens == rep.router.served_tokens
+    assert bd.revocations == 1
+
+
+def test_fleet_beats_on_demand_on_cost_at_equal_slo():
+    """The acceptance inequality on the hand-built traces: fleet SLO
+    violation seconds ≤ on-demand's, at strictly lower cost."""
+    hist, fut = _hand_markets()
+    wl = _hand_workload()
+    policy = ServePolicy(slo_horizon_hours=12.0, capacity_headroom=1.4)
+    feats = alg.MarketFeatures.from_history(hist)
+    rate = np.full(48, 400.0)
+    rate[0] = 0.0
+    fleet = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+    od = on_demand_reference(wl, feats, fut, 48.0, rate, policy)
+    assert fleet.slo_violation_seconds <= od.slo_violation_seconds
+    assert fleet.cost_dollars < od.cost_dollars
+    assert od.revocations == 0
+
+
+def test_static_overreplication_restores_more_bytes():
+    """The static spot baseline pays full serving-state restores through
+    storage on every revocation — strictly more bytes than the fleet's
+    params-only DCN migration for the same trace."""
+    hist, fut = _hand_markets()
+    wl = _hand_workload()
+    rate = np.full(48, 400.0)
+    rate[0] = 0.0
+    fleet = FleetSimulator(
+        hist, fut, wl, ServePolicy(slo_horizon_hours=12.0, capacity_headroom=1.4)
+    ).run(48.0, rate)
+    static = FleetSimulator(
+        hist, fut, wl,
+        ServePolicy(slo_horizon_hours=12.0, capacity_headroom=1.5),
+        mode="static",
+    ).run(48.0, rate)
+    assert static.revocations >= 1 and static.repairs >= 1
+    per_restore = wl.param_bytes + wl.cache_bytes
+    assert static.restored_bytes == static.repairs * per_restore
+    # the static restore is a storage pull: billed to recovery, like every
+    # other restore in the repo — never to recompute
+    assert static.breakdown.time["recovery"] > 0
+    assert fleet.breakdown.time["recovery"] == 0.0
+    if fleet.repairs:
+        assert (fleet.migrated_bytes / fleet.repairs) < per_restore
+
+
+def test_fleet_simulator_deterministic():
+    hist, fut = _hand_markets()
+    wl = _hand_workload()
+    policy = ServePolicy(slo_horizon_hours=12.0)
+    rate = np.full(48, 400.0)
+    a = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+    b = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+    assert a.cost_dollars == b.cost_dollars
+    assert a.router.served_tokens == b.router.served_tokens
+    assert a.breakdown.leg_cost == b.breakdown.leg_cost
+
+
+def test_replica_rate_scales_with_shape_throughput():
+    from repro.core.allocation import Allocation
+
+    _, _, feats, wl = _serve_setup()
+    # an 8-device market serves more tokens/sec than a 1-device one, but
+    # sublinearly (never 8x)
+    one = [i for i in range(len(feats.device_count)) if feats.device_count[i] == 1]
+    eight = [i for i in range(len(feats.device_count)) if feats.device_count[i] == 8]
+    r1 = replica_rate(wl, feats, Allocation.single(one[0], 1))
+    r8 = replica_rate(wl, feats, Allocation.single(eight[0], 8))
+    assert r1 == pytest.approx(wl.replica_tokens_per_sec)
+    assert r1 < r8 < 8 * r1

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Schema-validate every committed ``BENCH_*.json`` (stdlib only; CI).
+
+The machine-readable perf trajectory started in PR 4 only works if the
+files keep their shape: a bench that silently drops a key or reorders its
+scenario ids rots the trajectory without failing anything. This gate
+checks, per file:
+
+* ``BENCH_orchestrator.json`` — the three orchestrator modes are present
+  with their full metric set, plus the split scenario;
+* ``BENCH_serve.json`` — the serving scenarios carry every policy with
+  the full metric set, and scenario ids are 0..n-1 (monotonic, dense);
+* any OTHER ``BENCH_*.json`` — must at least be a JSON object, and if it
+  has a ``scenarios`` list, the ids must be monotonic.
+
+Exit 0 on success; prints each violation and exits 1 otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+ORCH_MODE_KEYS = {
+    "useful_steps", "wasted_steps", "revocations", "goodput", "cost_usd",
+    "completion_trace_hours", "reshard_bytes", "restore_bytes",
+    "reshard_usd", "recovery_usd", "cost_to_complete", "final_loss",
+    "leg_costs",
+}
+ORCH_SPLIT_KEYS = {
+    "steps", "allocations_used", "revocations", "leg_repairs",
+    "reshard_bytes", "full_restore_bytes", "cost_usd", "leg_costs",
+    "completion_trace_hours", "final_loss",
+}
+SERVE_POLICY_KEYS = {
+    "cost_usd", "slo_violation_seconds", "served_tokens", "shed_tokens",
+    "queued_token_seconds", "revocations", "repairs", "migrated_bytes",
+    "restored_bytes", "replicas_provisioned", "capacity_tokens_per_sec",
+    "billing_buffer_usd",
+}
+SERVE_POLICIES = {"fleet", "on_demand", "static"}
+
+
+def _require(errors, cond, msg):
+    if not cond:
+        errors.append(msg)
+
+
+def check_scenario_ids(errors, name, scenarios):
+    ids = [s.get("id") for s in scenarios]
+    _require(
+        errors,
+        ids == list(range(len(ids))),
+        f"{name}: scenario ids must be dense and monotonic from 0, got {ids}",
+    )
+
+
+def check_not_quick(errors, name, data):
+    """The committed trajectory must be the FULL run: a --quick smoke that
+    overwrites the repo-root JSON and gets committed silently degrades the
+    whole series (this is the rot this tool exists to catch)."""
+    _require(errors, data.get("quick") is False,
+             f"{name}: committed bench data must be a full run "
+             f"(quick: {data.get('quick')!r})")
+
+
+def check_orchestrator(errors, name, data):
+    _require(errors, set(data) >= {"steps", "modes", "split_scenario"},
+             f"{name}: missing top-level keys")
+    check_not_quick(errors, name, data)
+    modes = data.get("modes", {})
+    _require(errors, set(modes) == {"siwoft", "checkpoint", "hybrid"},
+             f"{name}: modes must be siwoft/checkpoint/hybrid, got {sorted(modes)}")
+    for mode, rep in modes.items():
+        missing = ORCH_MODE_KEYS - set(rep)
+        _require(errors, not missing, f"{name}: modes.{mode} missing {sorted(missing)}")
+    split = data.get("split_scenario", {})
+    missing = ORCH_SPLIT_KEYS - set(split)
+    _require(errors, not missing, f"{name}: split_scenario missing {sorted(missing)}")
+
+
+def check_serve(errors, name, data):
+    _require(errors, set(data) >= {"bench", "workload", "scenarios"},
+             f"{name}: missing top-level keys")
+    _require(errors, data.get("bench") == "serve", f"{name}: bench != 'serve'")
+    check_not_quick(errors, name, data)
+    scenarios = data.get("scenarios", [])
+    _require(errors, scenarios, f"{name}: no scenarios")
+    check_scenario_ids(errors, name, scenarios)
+    for s in scenarios:
+        sid = s.get("id")
+        _require(errors, set(s) >= {"id", "name", "hours", "policies"},
+                 f"{name}: scenario {sid} missing keys")
+        pols = s.get("policies", {})
+        _require(errors, set(pols) == SERVE_POLICIES,
+                 f"{name}: scenario {sid} policies {sorted(pols)} != {sorted(SERVE_POLICIES)}")
+        for p, rep in pols.items():
+            missing = SERVE_POLICY_KEYS - set(rep)
+            _require(errors, not missing,
+                     f"{name}: scenario {sid}.{p} missing {sorted(missing)}")
+
+
+def check_generic(errors, name, data):
+    _require(errors, isinstance(data, dict), f"{name}: top level must be an object")
+    if isinstance(data, dict) and isinstance(data.get("scenarios"), list):
+        check_scenario_ids(errors, name, data["scenarios"])
+
+
+CHECKERS = {
+    "BENCH_orchestrator.json": check_orchestrator,
+    "BENCH_serve.json": check_serve,
+}
+
+
+def main() -> int:
+    errors: list = []
+    found = sorted(REPO.glob("BENCH_*.json"))
+    if not found:
+        errors.append("no BENCH_*.json found at the repo root")
+    for path in found:
+        name = path.name
+        try:
+            data = json.loads(path.read_text(encoding="utf-8"))
+        except json.JSONDecodeError as e:
+            errors.append(f"{name}: invalid JSON ({e})")
+            continue
+        CHECKERS.get(name, check_generic)(errors, name, data)
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(found)} bench file(s); {len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

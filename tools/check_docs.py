@@ -16,7 +16,12 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
-REQUIRED = ["README.md", "docs/trace-format.md", "docs/accounting.md"]
+REQUIRED = [
+    "README.md",
+    "docs/trace-format.md",
+    "docs/accounting.md",
+    "docs/serving.md",
+]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
 # quoted exemplar material from OTHER repos — its links point into those
