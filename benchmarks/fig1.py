@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import argparse
 import sys
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
@@ -35,6 +35,7 @@ from repro.core import (
     split_history_future,
 )
 from repro.core.accounting import COST_COMPONENTS, TIME_COMPONENTS
+from repro.core.units import HOURS_PER_DAY
 
 LENGTHS = [6, 12, 24, 48, 96]            # hours (Fig 1a/1d x-axis)
 MEMORIES = [8, 16, 32, 64]               # GB    (Fig 1b/1e)
@@ -47,7 +48,10 @@ def make_sims(n_seeds: int, **market_kw):
     sims = []
     market_kw.setdefault("menu", legacy_menu())
     for seed in range(n_seeds):
-        ms = generate_markets(seed=seed, n_hours=24 * 90 + 24 * 60, **market_kw)
+        # 90 days of history to plan from + 60 days of future to run into
+        ms = generate_markets(
+            seed=seed, n_hours=(90 + 60) * HOURS_PER_DAY, **market_kw
+        )
         hist, fut = split_history_future(ms, 24 * 90)
         sims.append(Simulator(hist, fut, seed=seed))
     return sims

@@ -14,16 +14,21 @@ from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def timeit(fn: Callable, *args, iters: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    from repro.core.units import MICROSECONDS_PER_SECOND
+
+    out = fn(*args)
+    if isinstance(out, tuple):
+        out[0].block_until_ready()
+    else:
+        jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
         jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    return (time.perf_counter() - t0) / iters * MICROSECONDS_PER_SECOND
 
 
 def bench_blockwise_attention(rows: List[str]):

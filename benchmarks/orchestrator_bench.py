@@ -55,7 +55,6 @@ if "--split-only" in sys.argv:
         + " --xla_force_host_platform_device_count=8"
     ).strip()
 
-import jax
 
 from repro.config import TrainConfig, get_arch
 from repro.core import SiwoftPolicy, generate_markets, split_history_future

@@ -52,6 +52,7 @@ def build_workload():
     batch 4 × 256 context (no optimizer state), plus the migration byte
     quantities the fleet bills."""
     from repro.config import get_arch
+    from repro.core.units import BYTES_PER_GIB
     from repro.dist import serve_state_bytes
     from repro.models import build_model
     from repro.models.common import param_bytes
@@ -63,7 +64,7 @@ def build_workload():
     return ServingWorkload(
         target_tokens_per_sec=480.0,
         replica_tokens_per_sec=100.0,
-        state_gb=sb / 2**30,
+        state_gb=sb / BYTES_PER_GIB,
         param_bytes=pb,
         cache_bytes=sb - pb,
         inflight_context_tokens=4 * 256.0,
@@ -101,11 +102,13 @@ def run_policies(hist, fut, wl, hours, rate):
 
 
 def report_row(scenario, policy, rep):
+    from repro.core.units import SECONDS_PER_HOUR, TOKENS_PER_MEGATOKEN
+
     return (
         f"{scenario},{policy},{rep.cost_dollars:.4f},"
         f"{rep.slo_violation_seconds:.1f},"
-        f"{rep.router.served_tokens / 1e6:.3f},{rep.router.shed_tokens:.1f},"
-        f"{rep.router.queued_token_seconds / 3600.0:.1f},"
+        f"{rep.router.served_tokens / TOKENS_PER_MEGATOKEN:.3f},{rep.router.shed_tokens:.1f},"
+        f"{rep.router.queued_token_seconds / SECONDS_PER_HOUR:.1f},"
         f"{rep.revocations},{rep.repairs},"
         f"{rep.migrated_bytes},{rep.restored_bytes},{rep.replicas_provisioned}"
     )

@@ -12,7 +12,6 @@ import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import jax
 
 from repro.config import TrainConfig, get_arch
 from repro.core import generate_markets, split_history_future

@@ -60,7 +60,9 @@ def main():
     tc = TrainConfig(total_steps=args.steps, warmup_steps=20, learning_rate=3e-4)
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
     wd = StragglerWatchdog(
-        on_straggler=lambda s, dt, mean: print(f"  [watchdog] step {s} straggled: {dt:.2f}s vs mean {mean:.2f}s")
+        on_straggler=lambda s, dt, mean: print(
+            f"  [watchdog] step {s} straggled: {dt:.2f}s vs mean {mean:.2f}s"
+        )
     )
 
     state = init_train_state(model, jax.random.key(0))

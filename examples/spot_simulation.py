@@ -51,9 +51,11 @@ def main():
     print(f"job: {job.length_hours}h, {job.memory_gb} GB -> suitable type "
           f"{m.instance_type} across {len(suitable)} markets")
     print(f"Alg.1 picks market #{pick} ({m.zone}): MTTR={feats.mttr[pick]:.0f}h, "
-          f"revocation probability={revocation_probability(job.length_hours, feats.mttr[pick]):.4f}")
+          f"revocation probability="
+          f"{revocation_probability(job.length_hours, feats.mttr[pick]):.4f}")
     low_corr = alg.find_low_correlation(feats, pick, SiwoftPolicy())
-    print(f"low-correlation fallback set: {len(low_corr & set(suitable))} of {len(suitable)} suitable markets\n")
+    print(f"low-correlation fallback set: {len(low_corr & set(suitable))} "
+          f"of {len(suitable)} suitable markets\n")
 
     # --- run every policy --------------------------------------------------
     header = f"{'policy':13s} {'wall_h':>8s} {'cost_$':>8s} {'revs':>4s}  components"
@@ -71,7 +73,8 @@ def main():
         comps = " ".join(
             f"{k}={v:.2f}h" for k, v in bd.time.items() if v > 1e-9
         )
-        print(f"{policy.name:13s} {bd.wall_time:8.2f} {bd.total_cost:8.3f} {bd.revocations:4d}  {comps}")
+        print(f"{policy.name:13s} {bd.wall_time:8.2f} "
+              f"{bd.total_cost:8.3f} {bd.revocations:4d}  {comps}")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ import queue
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

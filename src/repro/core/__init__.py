@@ -8,6 +8,7 @@ simulator.py    discrete-event executor reproducing Fig. 1
 accounting.py   per-billing-cycle cost/time breakdowns
 orchestrator.py bridges the provisioner to the real JAX training loop
 """
+from repro.core.accounting import Breakdown
 from repro.core.allocation import DCN_BANDWIDTH_GBPS, Allocation, Leg, combined_throughput
 from repro.core.market import (
     INSTANCE_MENU,
@@ -40,7 +41,6 @@ from repro.core.provisioner import (
     find_suitable_allocations,
 )
 from repro.core.simulator import Simulator
-from repro.core.accounting import Breakdown
 
 __all__ = [
     "INSTANCE_MENU", "InstanceShape",

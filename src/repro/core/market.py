@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import csv
 import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

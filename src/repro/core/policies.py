@@ -26,25 +26,27 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.units import BYTES_PER_GB, MINUTES_PER_HOUR, SECONDS_PER_HOUR
+
 
 @dataclasses.dataclass(frozen=True)
 class OverheadModel:
-    startup_hours: float = 150.0 / 3600.0        # boot + docker pull ≈ 2.5 min
+    startup_hours: float = 150.0 / SECONDS_PER_HOUR  # boot + docker pull ≈ 2.5 min
     ckpt_bandwidth_gb_per_s: float = 0.05        # single-stream S3 ≈ 50 MB/s
     restore_bandwidth_gb_per_s: float = 0.05
     migration_bandwidth_gb_per_s: float = 1.0    # instance-to-instance
     live_migration_max_gb: float = 4.0           # paper cites SpotOn's bound
-    revocation_notice_hours: float = 2.0 / 60.0  # EC2's 2-minute warning
+    revocation_notice_hours: float = 2.0 / MINUTES_PER_HOUR  # EC2's 2-minute warning
     storage_cost_per_gb_hour: float = 0.0        # S3 cost negligible vs compute
 
     def ckpt_hours(self, mem_gb: float) -> float:
-        return mem_gb / self.ckpt_bandwidth_gb_per_s / 3600.0
+        return mem_gb / self.ckpt_bandwidth_gb_per_s / SECONDS_PER_HOUR
 
     def restore_hours(self, mem_gb: float) -> float:
-        return mem_gb / self.restore_bandwidth_gb_per_s / 3600.0
+        return mem_gb / self.restore_bandwidth_gb_per_s / SECONDS_PER_HOUR
 
     def migration_hours(self, mem_gb: float) -> float:
-        return mem_gb / self.migration_bandwidth_gb_per_s / 3600.0
+        return mem_gb / self.migration_bandwidth_gb_per_s / SECONDS_PER_HOUR
 
     def reshard_hours(self, bytes_moved: float, interconnect_gbps: float) -> float:
         """Live cross-mesh reshard: bytes actually moved (leaf-by-leaf, see
@@ -53,7 +55,7 @@ class OverheadModel:
         remote-storage path ``restore_hours`` models."""
         if bytes_moved <= 0:
             return 0.0
-        return bytes_moved / (max(interconnect_gbps, 1e-9) * 1e9) / 3600.0
+        return bytes_moved / (max(interconnect_gbps, 1e-9) * BYTES_PER_GB) / SECONDS_PER_HOUR
 
 
 def work_to_wall_hours(work_hours: float, throughput: float) -> float:

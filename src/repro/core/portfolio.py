@@ -27,7 +27,6 @@ import dataclasses
 import math
 from typing import List, Sequence
 
-import numpy as np
 
 from repro.core import provisioner as alg
 from repro.core.policies import Job, SiwoftPolicy

@@ -65,8 +65,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
-from repro.core.allocation import Allocation, Leg, combined_throughput
-from repro.core.market import MarketSet, revocation_probability
+from repro.core.allocation import Allocation, combined_throughput
+from repro.core.market import MarketSet
 from repro.core.policies import Job, SiwoftPolicy, work_to_wall_hours
 
 # Algorithm-1 candidates are Allocations since the multi-leg refactor; the

@@ -21,9 +21,8 @@ always totals the job length, and overhead is visible separately).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 

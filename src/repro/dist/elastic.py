@@ -18,8 +18,8 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
 
 from repro.config.base import ShardingLayout
 from repro.dist.sharding import param_shardings

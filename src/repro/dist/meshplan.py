@@ -25,7 +25,6 @@ training stack can run on and *price*:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax

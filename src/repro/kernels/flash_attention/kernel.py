@@ -22,10 +22,10 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 

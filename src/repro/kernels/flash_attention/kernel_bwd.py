@@ -26,10 +26,10 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+import numpy as np
 
 
 def _tile_mask(q_start, k_start, block_q, block_k, causal, window):

@@ -1,5 +1,5 @@
-from repro.kernels.mlstm.ops import mlstm
 from repro.kernels.mlstm.kernel import mlstm_chunkwise
+from repro.kernels.mlstm.ops import mlstm
 from repro.kernels.mlstm.ref import mlstm_ref
 
 __all__ = ["mlstm", "mlstm_chunkwise", "mlstm_ref"]

@@ -19,13 +19,13 @@ kernel carries its online-softmax state.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+import numpy as np
 
 
 def _mlstm_kernel(

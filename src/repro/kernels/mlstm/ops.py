@@ -3,7 +3,7 @@ lengths (gate pads use f̃=0, ĩ=-inf so padded steps are no-ops) and exposes
 the (B, S, H, hd) model layout."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

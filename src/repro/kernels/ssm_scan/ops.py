@@ -3,7 +3,7 @@ selective-parameter projections as plain jnp matmuls, calls the Pallas
 recurrence, and pads ragged shapes to block multiples."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,18 +18,16 @@ Results land in results/dryrun/<arch>__<shape>__<mesh>__<layout>.json and
 feed EXPERIMENTS.md §Dry-run / §Roofline.
 """
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import (
-    ModelConfig,
     ShardingLayout,
     TrainConfig,
     get_arch,
@@ -43,8 +41,8 @@ from repro.dist import (
     opt_state_shardings,
     param_shardings,
 )
+from repro.launch import hlo_cost
 from repro.launch.mesh import make_production_mesh
-from repro.launch import hlo_analysis, hlo_cost
 from repro.models import build_model, input_specs
 from repro.models.common import abstract_params
 from repro.train.steps import (
@@ -182,7 +180,9 @@ def lower_cell(
         else:  # decode
             step = build_decode_step(model, layout, constrain)
             params = abstract_params(model.specs)
-            c_specs = model.cache_specs(shape.global_batch, shape.seq_len, int8=layout.int8_kv_cache)
+            c_specs = model.cache_specs(
+                shape.global_batch, shape.seq_len, int8=layout.int8_kv_cache
+            )
             cache = abstract_params(c_specs)
             c_sh = cache_shardings(c_specs, mesh, layout)
             tok_sh = batch_shardings(inputs, mesh)["tokens"]

@@ -9,9 +9,8 @@ all-reduce we count the ring-equivalent 2× payload explicitly in roofline).
 from __future__ import annotations
 
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
-import numpy as np
 
 COLLECTIVE_KINDS = (
     "all-gather",

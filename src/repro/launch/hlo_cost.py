@@ -53,7 +53,8 @@ _ELEMENTWISE = {
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([a-z][\w\-]*)\((.*)$"
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([a-z][\w\-]*)\((.*)$"
 )
 _COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -220,7 +221,10 @@ def compute_cost(
                 trip = int(mt.group(1))
             mb = _BODY_RE.search(ins.rest)
             if mb:
-                body = compute_cost(comps, mb.group(1), bytes_at_boundary=bytes_at_boundary, _memo=_memo)
+                body = compute_cost(
+                    comps, mb.group(1),
+                    bytes_at_boundary=bytes_at_boundary, _memo=_memo,
+                )
                 total.add(body.scaled(trip))
         elif op == "fusion":
             mcall = _CALLS_RE.search(ins.rest)
@@ -238,7 +242,10 @@ def compute_cost(
             mcall = _CALLS_RE.search(ins.rest) or _TO_APPLY_RE.search(ins.rest)
             if mcall:
                 total.add(
-                    compute_cost(comps, mcall.group(1), bytes_at_boundary=bytes_at_boundary, _memo=_memo)
+                    compute_cost(
+                        comps, mcall.group(1),
+                        bytes_at_boundary=bytes_at_boundary, _memo=_memo,
+                    )
                 )
         elif op == "conditional":
             mb = _BRANCHES_RE.search(ins.rest)

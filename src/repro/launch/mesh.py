@@ -5,10 +5,9 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

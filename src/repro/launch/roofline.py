@@ -131,18 +131,25 @@ def main() -> None:
         raise SystemExit(f"no dry-run results for mesh {args.mesh} under {RESULTS_DIR}")
 
     if args.markdown:
-        print("| arch | shape | layout | t_comp (s) | t_mem (s) | t_coll (s) | bound | useful/HLO | roofline | peak GiB (adj) |")
+        print(
+            "| arch | shape | layout | t_comp (s) | t_mem (s) | t_coll (s) "
+            "| bound | useful/HLO | roofline | peak GiB (adj) |"
+        )
         print("|---|---|---|---|---|---|---|---|---|---|")
         for r in rows:
             print(
                 f"| {r['arch']} | {r['shape']} | {r['layout']}"
                 f"{'/mb' + str(r['microbatches']) if r['microbatches'] > 1 else ''} "
                 f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
-                f"| **{r['dominant'][:4]}** | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+                f"| **{r['dominant'][:4]}** | {r['useful_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.3f} "
                 f"| {r['peak_gib']:.1f} ({r['peak_adj_gib']:.1f}) |"
             )
     else:
-        hdr = f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'bound':>6s} {'use':>5s} {'roof':>6s} {'peak':>6s}"
+        hdr = (
+            f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+            f"{'t_coll':>9s} {'bound':>6s} {'use':>5s} {'roof':>6s} {'peak':>6s}"
+        )
         print(hdr + "\n" + "-" * len(hdr))
         for r in rows:
             print(
@@ -152,7 +159,8 @@ def main() -> None:
             )
     worst = min(rows, key=lambda r: r["roofline_fraction"])
     coll = max(rows, key=lambda r: r["t_collective_s"] / max(r["t_compute_s"], 1e-12))
-    print(f"\n# worst roofline fraction: {worst['arch']}:{worst['shape']} ({worst['roofline_fraction']:.3f})")
+    print(f"\n# worst roofline fraction: {worst['arch']}:{worst['shape']} "
+          f"({worst['roofline_fraction']:.3f})")
     print(f"# most collective-bound:   {coll['arch']}:{coll['shape']}")
 
 

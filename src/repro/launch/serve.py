@@ -52,9 +52,13 @@ def _serve_batch(cfg, B, S):
     """The (seeded, deterministic) serving inputs both paths share."""
     batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size, jnp.int32)}
     if cfg.encoder_layers:
-        batch["frames"] = jax.random.normal(jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
     if cfg.vision_tokens:
-        batch["patches"] = jax.random.normal(jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16)
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16
+        )
     return batch
 
 
@@ -230,9 +234,13 @@ def main() -> None:
     B, S = args.batch, args.prompt_len
     batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size, jnp.int32)}
     if cfg.encoder_layers:
-        batch["frames"] = jax.random.normal(jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
     if cfg.vision_tokens:
-        batch["patches"] = jax.random.normal(jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16)
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.vision_tokens, cfg.vision_width), jnp.bfloat16
+        )
 
     total = S + args.new_tokens
     in_sh = batch_shardings(batch, mesh)

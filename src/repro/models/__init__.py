@@ -1,5 +1,5 @@
 """Model zoo: 10 assigned architectures behind one functional API."""
-from repro.models.zoo import Model, build_model, concrete_inputs, input_specs
 from repro.models.transformer import RunOpts
+from repro.models.zoo import Model, build_model, concrete_inputs, input_specs
 
 __all__ = ["Model", "RunOpts", "build_model", "concrete_inputs", "input_specs"]

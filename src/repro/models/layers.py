@@ -18,8 +18,6 @@ chunk (sub-quadratic — this is what makes ``long_500k`` decoding viable).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -398,13 +396,21 @@ def make_cache_specs(
     hd = cfg.resolved_head_dim
     kv_dtype = "int8" if int8 else cfg.dtype
     spec = {
-        "k": ParamSpec((batch, cache_len, cfg.num_kv_heads, hd), ("batch", "seq", "kv_heads", "head_dim"), init="zeros", dtype=kv_dtype),
-        "v": ParamSpec((batch, cache_len, cfg.num_kv_heads, hd), ("batch", "seq", "kv_heads", "head_dim"), init="zeros", dtype=kv_dtype),
+        "k": ParamSpec((batch, cache_len, cfg.num_kv_heads, hd),
+                       ("batch", "seq", "kv_heads", "head_dim"),
+                       init="zeros", dtype=kv_dtype),
+        "v": ParamSpec((batch, cache_len, cfg.num_kv_heads, hd),
+                       ("batch", "seq", "kv_heads", "head_dim"),
+                       init="zeros", dtype=kv_dtype),
         "pos_ids": ParamSpec((cache_len,), (None,), init="zeros", dtype="int32"),
     }
     if int8:
-        spec["k_scale"] = ParamSpec((batch, cache_len, cfg.num_kv_heads, 1), ("batch", "seq", "kv_heads", None), init="zeros", dtype=cfg.dtype)
-        spec["v_scale"] = ParamSpec((batch, cache_len, cfg.num_kv_heads, 1), ("batch", "seq", "kv_heads", None), init="zeros", dtype=cfg.dtype)
+        spec["k_scale"] = ParamSpec((batch, cache_len, cfg.num_kv_heads, 1),
+                                    ("batch", "seq", "kv_heads", None),
+                                    init="zeros", dtype=cfg.dtype)
+        spec["v_scale"] = ParamSpec((batch, cache_len, cfg.num_kv_heads, 1),
+                                    ("batch", "seq", "kv_heads", None),
+                                    init="zeros", dtype=cfg.dtype)
     return spec
 
 
@@ -454,8 +460,12 @@ def decode_attention(
         k_use = _dequantize_kv(k, k_scale, q.dtype)
         v_use = _dequantize_kv(v, v_scale, q.dtype)
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
+        )
         k_use, v_use = k.astype(q.dtype), v.astype(q.dtype)
     pos_ids = jax.lax.dynamic_update_slice_in_dim(
         cache["pos_ids"], pos[None].astype(jnp.int32), slot, axis=0

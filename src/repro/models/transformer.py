@@ -21,7 +21,6 @@ Modality frontends (Whisper conv, InternViT) are stubs per the assignment:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -320,7 +319,9 @@ def _xlstm_group_full(params, x, cfg, opts, states=None, want_cache=False):
     def m_body(xx, pl):
         p, st = pl
         xx = opts.constrain(xx, "activation")
-        h, s = xlstm.mlstm_block(p["block"], layers.rmsnorm(p["ln"], xx, cfg.norm_eps), cfg, state=st)
+        h, s = xlstm.mlstm_block(
+            p["block"], layers.rmsnorm(p["ln"], xx, cfg.norm_eps), cfg, state=st
+        )
         return xx + h, s
 
     m_params = params["mlstm"]
@@ -470,7 +471,6 @@ def forward_train(params, batch, cfg: ModelConfig, opts: RunOpts):
 def prefill(params, batch, cfg: ModelConfig, opts: RunOpts, cache_seq_len: int):
     """Forward + cache build. Returns (last-position logits, cache)."""
     x, positions, memory, n_prefix = _embed_inputs(params, batch, cfg)
-    B = x.shape[0]
     T = cache_len_for(cfg, cache_seq_len)
 
     if cfg.block in (BlockKind.MLSTM, BlockKind.SLSTM):

@@ -9,7 +9,7 @@ frame embeddings, internvl precomputed patch embeddings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ FSDP-sharded params get FSDP-sharded (m, v) for free — ZeRO-style.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -46,6 +46,7 @@ from repro.core.accounting import Breakdown, Session, bill_session
 from repro.core.allocation import Allocation
 from repro.core.market import MarketSet, shape_throughput
 from repro.core.policies import Job, OverheadModel, SiwoftPolicy
+from repro.core.units import SECONDS_PER_HOUR
 from repro.serve.migrate import CACHE_POLICIES, MigrationCost, migration_cost
 from repro.serve.router import CapacityEvent, RouterStats, route_trace
 
@@ -312,7 +313,7 @@ class FleetReport:
 
     @property
     def slo_violation_seconds(self) -> float:
-        return self.breakdown.time["slo_violation"] * 3600.0
+        return self.breakdown.time["slo_violation"] * SECONDS_PER_HOUR
 
 
 class FleetSimulator:
@@ -556,7 +557,7 @@ class FleetSimulator:
                     )
 
         # -- drain to the end of the window, settle every open session ---
-        for rep, t0, _, session in live:
+        for _rep, t0, _, session in live:
             session.add("execution", max(hours - t0 - session.used_hours, 0.0))
             bill_session(session, price, bd)
 

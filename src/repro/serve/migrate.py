@@ -31,6 +31,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+from repro.core.units import BYTES_PER_GB, SECONDS_PER_HOUR
+
 CACHE_POLICIES = ("drop", "migrate")
 
 
@@ -85,11 +87,11 @@ def migration_cost(
     # cache under "migrate" may legitimately exceed it and is billed for
     # what it is, not asserted away.
     assert param_bytes < train_path, (param_bytes, train_path)
-    wire_hours = moved / (max(dcn_gbps, 1e-9) * 1e9) / 3600.0
+    wire_hours = moved / (max(dcn_gbps, 1e-9) * BYTES_PER_GB) / SECONDS_PER_HOUR
     recompute_hours = 0.0
     if cache_policy == "drop" and inflight_context_tokens > 0:
         recompute_hours = (
-            inflight_context_tokens / max(prefill_tokens_per_sec, 1e-9) / 3600.0
+            inflight_context_tokens / max(prefill_tokens_per_sec, 1e-9) / SECONDS_PER_HOUR
         )
     return MigrationCost(
         params_bytes=int(param_bytes),

@@ -40,6 +40,7 @@ import dataclasses
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.accounting import Breakdown
+from repro.core.units import SECONDS_PER_HOUR
 
 
 @dataclasses.dataclass
@@ -64,7 +65,7 @@ class RouterStats:
         """Land the counters on the shared Breakdown: the violation clock
         as a first-class time component (hours, like every other clock),
         the token volumes on the serving counter fields."""
-        bd.time["slo_violation"] += self.slo_violation_seconds / 3600.0
+        bd.time["slo_violation"] += self.slo_violation_seconds / SECONDS_PER_HOUR
         bd.served_tokens += self.served_tokens
         bd.shed_tokens += self.shed_tokens
         bd.queued_token_seconds += self.queued_token_seconds
@@ -197,7 +198,7 @@ def route_trace(
             q,
             float(rate_tokens_per_sec[rate_idx]),
             events[cap_i].tokens_per_sec,
-            (t1 - t0) * 3600.0,
+            (t1 - t0) * SECONDS_PER_HOUR,
             max_delay_seconds=max_delay_seconds,
             shed_delay_seconds=shed_delay_seconds,
         )

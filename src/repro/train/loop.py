@@ -12,18 +12,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.config.base import ShardingLayout, TrainConfig
 from repro.data import Prefetcher, SyntheticLM
-from repro.dist import batch_shardings, make_activation_constrainer, param_shardings
+from repro.dist import make_activation_constrainer, param_shardings
 from repro.models import zoo
 from repro.optim import OptState
-from repro.train.steps import TrainState, build_train_step, init_train_state
+from repro.train.steps import TrainState, build_train_step
 from repro.train.watchdog import StragglerWatchdog
 
 

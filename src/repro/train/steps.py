@@ -18,14 +18,12 @@ updates the KV cache in place (donated) via dynamic_update_slice.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import ModelConfig, ShardingLayout, TrainConfig
+from repro.config.base import ShardingLayout, TrainConfig
 from repro.models import zoo
 from repro.models.transformer import RunOpts
 from repro.optim import (
@@ -146,7 +144,6 @@ def build_train_step(
     layout: ShardingLayout,
     constrain=None,
 ) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
-    cfg = model.cfg
     opts = run_opts_from_layout(layout, constrain)
     compress = layout.gradient_allreduce_dtype == "bfloat16"
 

@@ -1,0 +1,1 @@
+KNOWN = ("execution", "billing_buffer")

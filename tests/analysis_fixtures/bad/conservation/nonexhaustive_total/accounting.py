@@ -1,0 +1,15 @@
+"""C004: total_time enumerates keys and silently drops 'recovery'."""
+TIME_COMPONENTS = ("execution", "recovery")
+COST_COMPONENTS = TIME_COMPONENTS + ("billing_buffer",)
+
+
+class Breakdown:
+    def __init__(self):
+        self.time = {k: 0.0 for k in TIME_COMPONENTS}
+        self.cost = {k: 0.0 for k in COST_COMPONENTS}
+
+    def total_time(self):
+        return self.time["execution"]          # C004: misses 'recovery'
+
+    def total_cost(self):
+        return sum(self.cost.values())

@@ -1,0 +1,1 @@
+KNOWN = ("execution", "recovery", "billing_buffer")

@@ -1,0 +1,15 @@
+"""C002: 'billing_buffer' never documented."""
+TIME_COMPONENTS = ("execution", "recovery")
+COST_COMPONENTS = TIME_COMPONENTS + ("billing_buffer",)
+
+
+class Breakdown:
+    def __init__(self):
+        self.time = {k: 0.0 for k in TIME_COMPONENTS}
+        self.cost = {k: 0.0 for k in COST_COMPONENTS}
+
+    def total_time(self):
+        return sum(self.time.values())
+
+    def total_cost(self):
+        return sum(self.cost.values())

@@ -1,0 +1,11 @@
+"""D002: implicit-state RNGs (stdlib random / numpy legacy global)."""
+import random
+
+import numpy as np
+
+
+def jitter(prices):
+    noise = random.random()                    # D002: stdlib global state
+    pick = random.choice(prices)               # D002
+    np.random.seed(0)                          # D002: numpy legacy global RNG
+    return noise, pick, np.random.rand(3)      # D002

@@ -1,0 +1,8 @@
+"""D003: default_rng without an explicit seed/SeedSequence flowing in."""
+import numpy as np
+
+
+def build(n):
+    rng = np.random.default_rng()              # D003: OS entropy
+    rng2 = np.random.default_rng(12345)        # D003: anonymous literal seed
+    return rng.normal(size=n) + rng2.normal(size=n)

@@ -1,0 +1,10 @@
+"""D001: wall-clock reads in the deterministic core."""
+import time
+from datetime import datetime
+
+
+def stamp(trace):
+    trace.started = time.time()                # D001
+    trace.tick = time.monotonic()              # D001
+    trace.day = datetime.now()                 # D001
+    return trace

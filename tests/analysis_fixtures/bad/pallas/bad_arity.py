@@ -1,0 +1,18 @@
+"""P002: index_map arity differs from the grid rank."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def bump(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4, 8),
+        in_specs=[pl.BlockSpec((64, 64), lambda i: (i, 0))],   # P002: 1 != 2
+        out_specs=pl.BlockSpec((64, 64), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((256, 512), jnp.float32),
+    )(x)

@@ -1,0 +1,18 @@
+"""P001: block shape does not tile the declared out_shape."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((128, 300), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 300), lambda i: (i, 0)),  # P001: 128 !| 300
+        out_shape=jax.ShapeDtypeStruct((300, 300), jnp.float32),
+    )(x)

@@ -1,0 +1,24 @@
+"""P003: Python side effects inside a kernel body (trace-time, not per-step)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SEEN = []
+_COUNT = 0
+
+
+def _kernel(x_ref, o_ref):
+    global _COUNT                              # P003: global mutation
+    print("step")                              # P003: print at trace time
+    _SEEN.append(x_ref.shape)                  # P003: closure list mutation
+    o_ref[...] = x_ref[...]
+
+
+def copy(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((64, 64), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((64, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((128, 64), jnp.float32),
+    )(x)

@@ -1,0 +1,18 @@
+"""P004: a pallas_call kernel package with no ref.py and no kernel test."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 3.0
+
+
+def triple(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((64, 64), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((64, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((128, 64), jnp.float32),
+    )(x)

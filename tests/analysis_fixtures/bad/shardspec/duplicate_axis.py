@@ -1,0 +1,10 @@
+"""S002: one mesh axis used twice within a single spec."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def build():
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    twice = P("data", "data")                  # S002: data partitions two dims
+    joint = P(("model", "model"), None)        # S002: repeated in joint tuple
+    return mesh, twice, joint

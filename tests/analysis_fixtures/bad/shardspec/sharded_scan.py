@@ -1,0 +1,12 @@
+"""S003: a scan (lax.scan stacking) dim mapped to a real mesh axis."""
+import jax
+
+
+def build():
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rules = {
+        "embed": ("data",),
+        "layers": ("model",),                  # S003: scan dims never shard
+        "groups": ("data",),                   # S003
+    }
+    return mesh, rules

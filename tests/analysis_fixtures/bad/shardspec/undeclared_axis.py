@@ -1,0 +1,10 @@
+"""S001: PartitionSpec / rule table name an axis no mesh declares."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def build():
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    spec = P("data", "tensor")                 # S001: 'tensor' undeclared
+    rules = {"embed": ("dataa",)}              # S001: typo'd 'dataa'
+    return mesh, spec, rules

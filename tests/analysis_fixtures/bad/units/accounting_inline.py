@@ -1,0 +1,7 @@
+"""U003: conversion-literal arithmetic inline at accounting entry points."""
+
+
+def ledger(session, leg, bill_session, settle_leg, wall_seconds, mem_bytes):
+    bill_session(session, wall_seconds / 3600.0)         # U003
+    settle_leg(leg, price=mem_bytes / 1e9)               # U003 (keyword arg)
+    session.add("execution", wall_seconds / 3600.0)      # U003 (Session.add)

@@ -1,0 +1,8 @@
+"""U002: bare unit-conversion literals in arithmetic."""
+
+
+def convert(wall_hours, state_bytes):
+    wall_seconds = wall_hours * 3600           # U002: bare 3600
+    state_gb = state_bytes / 1e9               # U002: bare 1e9
+    state_gib = state_bytes / 2**30            # U002: bare power-of-two factor
+    return wall_seconds, state_gb, state_gib

@@ -1,0 +1,8 @@
+"""U001: +/- and comparisons across incompatible unit dimensions."""
+
+
+def deadline_check(wall_hours, mttr_seconds, budget_usd, spent_tokens):
+    slack = wall_hours - mttr_seconds          # U001: hours minus seconds
+    if wall_hours > mttr_seconds:              # U001: compares hours to seconds
+        slack = budget_usd + spent_tokens      # U001: usd plus tokens
+    return slack

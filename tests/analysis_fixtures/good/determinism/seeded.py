@@ -1,0 +1,9 @@
+"""Accepted: RNG state flows from explicit seeds; no ambient entropy."""
+import numpy as np
+
+
+def build(seed, n):
+    rng = np.random.default_rng(seed)
+    child = np.random.default_rng(np.random.SeedSequence(entropy=seed))
+    spawned = np.random.default_rng((seed, 77))
+    return rng.normal(size=n) + child.normal(size=n) + spawned.normal(size=n)

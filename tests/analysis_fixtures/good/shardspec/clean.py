@@ -1,0 +1,12 @@
+"""Accepted: every axis declared, used once, scan dims replicated."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def build(multi_pod):
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape = (2, 4, 4) if multi_pod else (4, 4)
+    mesh = jax.make_mesh(shape, axes)
+    spec = P(("pod", "data"), "model", None)
+    rules = {"embed": ("data",), "ffn": ("model",), "layers": ()}
+    return mesh, spec, rules

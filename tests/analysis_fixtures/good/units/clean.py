@@ -1,0 +1,18 @@
+"""Accepted: conversions through named constants, same-dimension math."""
+
+SECONDS_PER_HOUR = 3600.0
+BYTES_PER_GB = 1e9
+
+
+def convert(wall_hours, mttr_hours, state_bytes, limit_bytes):
+    wall_seconds = wall_hours * SECONDS_PER_HOUR
+    slack_hours = wall_hours - mttr_hours
+    if state_bytes > limit_bytes:
+        state_gb = state_bytes / BYTES_PER_GB
+    else:
+        state_gb = 0.0
+    return wall_seconds, slack_hours, state_gb
+
+
+def ledger(session, wall_hours):
+    session.add("execution", wall_hours)

@@ -89,10 +89,9 @@ except ModuleNotFoundError:
     _install_hypothesis_fallback()
 
 import jax
-import numpy as np
 import pytest
 
-from repro.config import InputShape, get_arch, list_archs
+from repro.config import InputShape
 
 
 @pytest.fixture(scope="session")

@@ -1,9 +1,9 @@
 """Billing-cycle accounting properties (hypothesis) + CSV trace loader."""
 import math
 
+from hypothesis import given, settings, strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.accounting import Breakdown, Session, bill_session
 from repro.core.market import generate_markets, load_csv_traces

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.config import InputShape, TrainConfig, ShardingLayout, get_arch, list_archs
-from repro.models import RunOpts, build_model, concrete_inputs
+from repro.models import build_model, concrete_inputs
 from repro.train.steps import build_train_step, init_train_state
 
 ARCHS = list_archs()

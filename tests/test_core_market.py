@@ -1,12 +1,11 @@
 """Market-feature correctness + hypothesis property tests on the paper's
 three §III-A features and Algorithm 1's invariants."""
+from hypothesis import given, settings, strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     Job,
-    MarketSet,
     SiwoftPolicy,
     generate_markets,
     revocation_probability,
@@ -45,7 +44,6 @@ def test_mttr_is_window_over_revocations(markets):
 
 def test_correlation_matrix_properties(markets):
     corr = markets.correlation_matrix()
-    n = corr.shape[0]
     assert np.allclose(corr, corr.T)
     assert (corr >= 0).all() and (corr <= 1).all()
     rev_counts = markets.revocation_matrix().sum(axis=1)

@@ -4,9 +4,8 @@ mesh (values must survive any re-layout bit-exactly), plus rule-table /
 constrainer properties that need no multi-device subprocess."""
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 import numpy as np
-import pytest
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ShardingLayout, get_arch
 from repro.dist import (

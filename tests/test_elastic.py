@@ -4,12 +4,10 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.dist import replicate, reshard_tree
+from repro.dist import reshard_tree
 
 
 def test_reshard_tree_identity(host_mesh):

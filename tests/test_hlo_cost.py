@@ -2,7 +2,6 @@
 FLOP counts (the measurement backbone of the roofline analysis)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze_hlo, parse_module

@@ -15,8 +15,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.dist import (
     ElasticMeshManager,

@@ -2,7 +2,6 @@
 modes, with revocation/restore/goodput accounting."""
 import tempfile
 
-import jax
 import numpy as np
 import pytest
 

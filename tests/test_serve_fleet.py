@@ -2,6 +2,7 @@
 admission, correlation spread, migration byte invariants, and the
 trace-driven fleet simulator end-to-end (revocation → params-only
 migration → re-route → repair)."""
+from hypothesis import given, settings, strategies as st
 import numpy as np
 import pytest
 
@@ -21,8 +22,6 @@ from repro.serve import (
     replica_rate,
     route_trace,
 )
-
-from hypothesis import given, settings, strategies as st
 
 
 # --- router: the deterministic open-loop queue ------------------------------

@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import InputShape, get_arch
-from repro.models import build_model, concrete_inputs
+from repro.config import get_arch
+from repro.models import build_model
 from repro.models.transformer import RunOpts
 
 

@@ -3,9 +3,9 @@ per-arch resolvability on the production mesh (no real devices needed —
 mesh axis math only requires an AbstractMesh-compatible mesh; we use the
 host mesh shaped (1,1) plus synthetic Mesh objects via jax.sharding)."""
 import jax
+from jax.sharding import Mesh, PartitionSpec as P
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config import ShardingLayout, get_arch, list_archs
 from repro.dist import PARAM_RULES, batch_shardings, param_shardings, resolve_pspec

@@ -1,0 +1,251 @@
+"""repro-lint test suite: every bad fixture raises exactly its rule, every
+good fixture is accepted, the real tree is clean, and suppression /
+reporting behave as documented (docs/invariants.md)."""
+import json
+from pathlib import Path
+import sys
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.analysis.conservation import ConservationPass  # noqa: E402
+from tools.analysis.core import (  # noqa: E402
+    SourceFile,
+    all_passes,
+    render,
+    run_analysis,
+)
+from tools.analysis.determinism import DeterminismPass  # noqa: E402
+from tools.analysis.pallas import PallasPass  # noqa: E402
+from tools.analysis.shardspec import ShardSpecPass  # noqa: E402
+from tools.analysis.units import UnitsPass  # noqa: E402
+
+FIX = REPO / "tests" / "analysis_fixtures"
+
+
+def run_pass(p, files, root=REPO):
+    srcs = [SourceFile.load(f) for f in files]
+    return p.run(srcs, root)
+
+
+def rules_of(diags):
+    return {d.rule for d in diags}
+
+
+# ---------------------------------------------------------------------------
+# units (U001–U003)
+# ---------------------------------------------------------------------------
+
+def test_units_bad_fixtures_fire_exactly_their_rule():
+    cases = {
+        "mixed_dims.py": ("U001", 3),
+        "bare_literal.py": ("U002", 3),
+        "accounting_inline.py": ("U003", 3),
+    }
+    for name, (rule, count) in cases.items():
+        diags = run_pass(UnitsPass(), [FIX / "bad" / "units" / name])
+        assert rules_of(diags) == {rule}, (name, diags)
+        assert len(diags) == count, (name, diags)
+
+
+def test_units_good_fixture_accepted():
+    assert run_pass(UnitsPass(), [FIX / "good" / "units" / "clean.py"]) == []
+
+
+def test_units_scope_excludes_units_module_itself():
+    p = UnitsPass()
+    assert not p.applies_to(Path("src/repro/core/units.py"))
+    assert p.applies_to(Path("src/repro/core/accounting.py"))
+    assert p.applies_to(Path("benchmarks/fig1.py"))
+    assert not p.applies_to(Path("src/repro/models/gpt.py"))
+
+
+# ---------------------------------------------------------------------------
+# conservation (C001–C004) — mini-tree fixtures
+# ---------------------------------------------------------------------------
+
+def test_conservation_bad_trees_fire_exactly_their_rule():
+    cases = {
+        "unknown_component": ("C001", 2),
+        "undocumented": ("C002", 1),
+        "gate_missing": ("C003", 1),
+        "nonexhaustive_total": ("C004", 1),
+    }
+    for tree, (rule, count) in cases.items():
+        root = FIX / "bad" / "conservation" / tree
+        diags = run_pass(ConservationPass(), [root / "accounting.py"], root)
+        assert rules_of(diags) == {rule}, (tree, diags)
+        assert len(diags) == count, (tree, diags)
+
+
+def test_conservation_good_tree_accepted():
+    root = FIX / "good" / "conservation" / "clean_tree"
+    assert run_pass(ConservationPass(), [root / "accounting.py"], root) == []
+
+
+def test_conservation_silent_without_registry(tmp_path):
+    f = tmp_path / "noreg.py"
+    f.write_text("def g(bd, h):\n    bd.time['whatever'] += h\n")
+    assert run_pass(ConservationPass(), [f], tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# determinism (D001–D003)
+# ---------------------------------------------------------------------------
+
+def test_determinism_bad_fixtures_fire_exactly_their_rule():
+    cases = {
+        "wall_clock.py": ("D001", 3),
+        "stdlib_random.py": ("D002", 4),
+        "unseeded_rng.py": ("D003", 2),
+    }
+    for name, (rule, count) in cases.items():
+        diags = run_pass(DeterminismPass(), [FIX / "bad" / "determinism" / name])
+        assert rules_of(diags) == {rule}, (name, diags)
+        assert len(diags) == count, (name, diags)
+
+
+def test_determinism_good_fixture_accepted():
+    diags = run_pass(DeterminismPass(), [FIX / "good" / "determinism" / "seeded.py"])
+    assert diags == []
+
+
+def test_determinism_scope_is_core_serve_dist():
+    p = DeterminismPass()
+    assert p.applies_to(Path("src/repro/core/orchestrator.py"))
+    assert p.applies_to(Path("src/repro/serve/router.py"))
+    assert not p.applies_to(Path("benchmarks/serve_bench.py"))
+    assert not p.applies_to(Path("src/repro/launch/dryrun.py"))
+
+
+# ---------------------------------------------------------------------------
+# pallas (P001–P004)
+# ---------------------------------------------------------------------------
+
+def test_pallas_bad_fixtures_fire_exactly_their_rule():
+    cases = {
+        "bad_divisibility.py": ("P001", 1),
+        "bad_arity.py": ("P002", 1),
+        "side_effect.py": ("P003", 3),
+    }
+    for name, (rule, count) in cases.items():
+        diags = run_pass(PallasPass(), [FIX / "bad" / "pallas" / name])
+        assert rules_of(diags) == {rule}, (name, diags)
+        assert len(diags) == count, (name, diags)
+
+
+def test_pallas_missing_ref_and_test_fire_p004():
+    root = FIX / "bad" / "pallas_tree"
+    kernel = root / "kernels" / "badpkg" / "kernel.py"
+    diags = run_pass(PallasPass(), [kernel], root)
+    assert rules_of(diags) == {"P004"}, diags
+    assert len(diags) == 2, diags  # no ref.py AND not exercised by tests
+
+
+def test_pallas_good_fixture_accepted():
+    diags = run_pass(PallasPass(), [FIX / "good" / "pallas" / "clean_kernel.py"])
+    assert diags == []
+
+
+def test_pallas_real_kernels_clean():
+    kernels = sorted((REPO / "src" / "repro" / "kernels").rglob("kernel*.py"))
+    assert kernels, "expected real kernel modules in src/repro/kernels"
+    assert run_pass(PallasPass(), kernels, REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# shardspec (S001–S003)
+# ---------------------------------------------------------------------------
+
+def test_shardspec_bad_fixtures_fire_exactly_their_rule():
+    cases = {
+        "undeclared_axis.py": "S001",
+        "duplicate_axis.py": "S002",
+        "sharded_scan.py": "S003",
+    }
+    for name, rule in cases.items():
+        diags = run_pass(ShardSpecPass(), [FIX / "bad" / "shardspec" / name])
+        assert rules_of(diags) == {rule}, (name, diags)
+        assert diags, name
+
+
+def test_shardspec_good_fixture_accepted():
+    diags = run_pass(ShardSpecPass(), [FIX / "good" / "shardspec" / "clean.py"])
+    assert diags == []
+
+
+def test_shardspec_real_tree_declares_all_used_axes():
+    files = sorted((REPO / "src" / "repro" / "dist").glob("*.py")) + sorted(
+        (REPO / "src" / "repro" / "launch").glob("*.py")
+    )
+    assert run_pass(ShardSpecPass(), files, REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# suppression, runner, reporting
+# ---------------------------------------------------------------------------
+
+def test_line_suppression_silences_exactly_that_rule(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    f = pkg / "conv.py"
+    f.write_text(
+        "def f(wall_hours):\n"
+        "    return wall_hours * 3600  # repro-lint: disable=U002\n"
+    )
+    assert run_analysis(paths=[tmp_path / "src"], root=tmp_path) == []
+    f.write_text("def f(wall_hours):\n    return wall_hours * 3600\n")
+    diags = run_analysis(paths=[tmp_path / "src"], root=tmp_path)
+    assert [d.rule for d in diags] == ["U002"]
+
+
+def test_file_suppression_header(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    f = pkg / "clock.py"
+    f.write_text(
+        "# repro-lint: disable-file=D001\n"
+        "import time\n"
+        "def f():\n"
+        "    return time.time()\n"
+    )
+    assert run_analysis(paths=[tmp_path / "src"], root=tmp_path) == []
+
+
+def test_repo_tree_is_clean():
+    assert run_analysis() == []
+
+
+def test_render_json_roundtrip(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "conv.py").write_text("def f(h):\n    return h * 3600\n")
+    diags = run_analysis(paths=[tmp_path / "src"], root=tmp_path)
+    payload = json.loads(render(diags, tmp_path, fmt="json"))
+    assert payload["tool"] == "repro-lint"
+    assert payload["problems"] == len(diags) == 1
+    d = payload["diagnostics"][0]
+    assert d["rule"] == "U002" and d["path"].endswith("conv.py")
+    text = render(diags, tmp_path, fmt="text")
+    assert "U002" in text and text.endswith("1 problem(s)")
+
+
+def test_rule_catalogue_is_unique_and_documented():
+    doc = (REPO / "docs" / "invariants.md").read_text(encoding="utf-8")
+    seen = {}
+    for p in all_passes():
+        assert p.name and p.rules
+        for rule, meaning in p.rules.items():
+            assert rule not in seen, f"{rule} declared by {seen.get(rule)} and {p.name}"
+            seen[rule] = p.name
+            assert meaning
+            assert rule in doc, f"{rule} missing from docs/invariants.md"
+
+
+def test_cli_exits_zero_on_clean_tree(capsys):
+    from tools.analysis.__main__ import main
+
+    assert main(["--format=json"]) == 0
+    out = capsys.readouterr().out
+    assert json.loads(out)["problems"] == 0

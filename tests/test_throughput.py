@@ -24,7 +24,7 @@ from repro.core import (
     split_history_future,
 )
 from repro.core import provisioner as alg
-from repro.core.market import INSTANCE_MENU, Market, MarketSet
+from repro.core.market import Market, MarketSet
 from repro.core.provisioner import MarketFeatures
 
 

@@ -1,0 +1,148 @@
+"""Tests for the CI gate scripts: tools/check_bench.py (schema gate,
+generic fallback, breakdown registry mirror) and tools/check_docs.py
+(required-docs list, markdown link check)."""
+import json
+from pathlib import Path
+import sys
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools import check_bench, check_docs  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# check_bench
+# ---------------------------------------------------------------------------
+
+def test_check_bench_accepts_committed_files():
+    assert check_bench.main() == 0
+
+
+def test_check_bench_rejects_malformed_json(tmp_path, capsys):
+    (tmp_path / "BENCH_orchestrator.json").write_text("{not json", encoding="utf-8")
+    assert check_bench.main(tmp_path) == 1
+    assert "invalid JSON" in capsys.readouterr().err
+
+
+def test_check_bench_unknown_name_uses_generic_fallback(tmp_path):
+    # an object with dense monotonic scenario ids passes the fallback ...
+    good = {"bench": "novel", "scenarios": [{"id": 0}, {"id": 1}, {"id": 2}]}
+    (tmp_path / "BENCH_novel.json").write_text(json.dumps(good), encoding="utf-8")
+    assert check_bench.main(tmp_path) == 0
+
+
+def test_check_bench_generic_rejects_non_object_and_bad_ids(tmp_path, capsys):
+    (tmp_path / "BENCH_list.json").write_text("[1, 2, 3]", encoding="utf-8")
+    # ... but non-monotonic / sparse ids are the rot the gate exists to catch
+    sparse = {"scenarios": [{"id": 0}, {"id": 2}]}
+    (tmp_path / "BENCH_sparse.json").write_text(json.dumps(sparse), encoding="utf-8")
+    assert check_bench.main(tmp_path) == 1
+    err = capsys.readouterr().err
+    assert "top level must be an object" in err
+    assert "dense and monotonic" in err
+
+
+def test_check_bench_missing_dir_reports_no_files(tmp_path, capsys):
+    assert check_bench.main(tmp_path / "empty") == 1
+    assert "no BENCH_" in capsys.readouterr().err
+
+
+def test_check_bench_breakdown_components_must_be_registry_names(tmp_path, capsys):
+    data = {
+        "bench": "novel",
+        "scenarios": [
+            {"id": 0, "time_breakdown": {"execution": 1.0, "warmup": 0.5}}
+        ],
+    }
+    (tmp_path / "BENCH_novel.json").write_text(json.dumps(data), encoding="utf-8")
+    assert check_bench.main(tmp_path) == 1
+    assert "warmup" in capsys.readouterr().err
+    # registry names pass, including the cost-only billing_buffer
+    ok = {
+        "bench": "novel",
+        "scenarios": [{"id": 0}],
+        "cost_breakdown": {"execution": 1.0, "billing_buffer": 0.1},
+    }
+    (tmp_path / "BENCH_novel.json").write_text(json.dumps(ok), encoding="utf-8")
+    assert check_bench.main(tmp_path) == 0
+
+
+def test_check_bench_registry_mirrors_accounting():
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.accounting import COST_COMPONENTS, TIME_COMPONENTS
+
+    assert check_bench.KNOWN_TIME_COMPONENTS == TIME_COMPONENTS
+    assert check_bench.KNOWN_COST_COMPONENTS == COST_COMPONENTS
+
+
+# ---------------------------------------------------------------------------
+# check_docs
+# ---------------------------------------------------------------------------
+
+def _make_doc_tree(root: Path):
+    for rel in check_docs.REQUIRED:
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(f"# {rel}\n", encoding="utf-8")
+
+
+def test_check_docs_accepts_committed_tree():
+    assert check_docs.main() == 0
+
+
+def test_check_docs_requires_invariants_doc(tmp_path, capsys):
+    assert "docs/invariants.md" in check_docs.REQUIRED
+    _make_doc_tree(tmp_path)
+    (tmp_path / "docs" / "invariants.md").unlink()
+    assert check_docs.main(tmp_path) == 1
+    assert "docs/invariants.md" in capsys.readouterr().err
+
+
+def test_check_docs_catches_broken_markdown_link(tmp_path, capsys):
+    _make_doc_tree(tmp_path)
+    (tmp_path / "README.md").write_text(
+        "see [the gone doc](docs/missing.md)\n", encoding="utf-8"
+    )
+    assert check_docs.main(tmp_path) == 1
+    assert "broken link -> docs/missing.md" in capsys.readouterr().err
+    # anchors and external links are not treated as file targets
+    (tmp_path / "README.md").write_text(
+        "see [acct](docs/accounting.md#totals) and "
+        "[paper](https://example.com/x) and [top](#top)\n",
+        encoding="utf-8",
+    )
+    assert check_docs.main(tmp_path) == 0
+
+
+def test_check_docs_skips_quoted_exemplar_files(tmp_path):
+    _make_doc_tree(tmp_path)
+    (tmp_path / "SNIPPETS.md").write_text(
+        "[external tree](some/other/repo/file.py)\n", encoding="utf-8"
+    )
+    assert check_docs.main(tmp_path) == 0
+
+
+def test_check_bench_and_docs_cli_entrypoints():
+    import subprocess
+
+    for script in ("tools/check_bench.py", "tools/check_docs.py"):
+        res = subprocess.run(
+            [sys.executable, script], cwd=REPO, capture_output=True, text=True
+        )
+        assert res.returncode == 0, (script, res.stdout, res.stderr)
+        assert "0 problem(s)" in res.stdout
+
+
+def test_repro_lint_cli_entrypoint():
+    import subprocess
+
+    res = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "src/", "benchmarks/"],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+    )
+    assert res.returncode == 0, (res.stdout, res.stderr)
+    assert "0 problem(s)" in res.stdout

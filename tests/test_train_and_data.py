@@ -1,20 +1,18 @@
 """Training loop, optimizer, data pipeline, and watchdog behaviour."""
-import time
 
+from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.config import InputShape, ShardingLayout, TrainConfig, get_arch
+from repro.config import ShardingLayout, TrainConfig, get_arch
 from repro.data import Prefetcher, SyntheticLM
 from repro.models import build_model
 from repro.optim import adamw_update, clip_by_global_norm, global_norm, init_opt_state
 from repro.optim.schedule import linear, warmup_cosine
 from repro.train.loop import Revoked, run_segment
 from repro.train.steps import (
-    build_train_step,
     chunked_cross_entropy,
     cross_entropy,
     init_train_state,
@@ -120,7 +118,6 @@ def test_prefetcher_in_order():
 
 def test_watchdog_flags_straggler():
     wd = StragglerWatchdog(warmup=3, k_sigma=4.0)
-    flagged = []
     for i in range(20):
         wd.observe(i, 0.1 + 0.001 * (i % 3))
     assert wd.observe(20, 1.0)  # 10× the mean

@@ -1,0 +1,24 @@
+"""repro-lint: invariant-enforcing static analysis for the repro tree.
+
+Run as ``python -m tools.analysis [paths...] [--format=json|text]``.
+See docs/invariants.md for the rule catalogue and suppression syntax.
+"""
+from tools.analysis.core import (
+    REPO,
+    Diagnostic,
+    Pass,
+    SourceFile,
+    all_passes,
+    render,
+    run_analysis,
+)
+
+__all__ = [
+    "REPO",
+    "Diagnostic",
+    "Pass",
+    "SourceFile",
+    "all_passes",
+    "render",
+    "run_analysis",
+]

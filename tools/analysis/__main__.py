@@ -1,0 +1,52 @@
+"""CLI entry point: ``python -m tools.analysis src/ benchmarks/ launch/``."""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from tools.analysis.core import REPO, all_passes, render, run_analysis
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repro-lint: invariant-enforcing static analysis "
+        "(units, conservation, determinism, Pallas, sharding).",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        type=Path,
+        help="files or directories to scan (default: src/ benchmarks/)",
+    )
+    parser.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="diagnostic output format",
+    )
+    parser.add_argument(
+        "--pass",
+        dest="passes",
+        action="append",
+        choices=[p.name for p in all_passes()],
+        help="run only the named pass (repeatable)",
+    )
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=REPO,
+        help="repo root for repo-level checks and relative paths",
+    )
+    args = parser.parse_args(argv)
+
+    root = args.root.resolve()
+    paths = [p if p.is_absolute() else root / p for p in args.paths] or None
+    diags = run_analysis(paths=paths, root=root, only_passes=args.passes)
+    out = render(diags, root, fmt=args.format)
+    print(out)
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

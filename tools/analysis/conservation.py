@@ -1,0 +1,231 @@
+"""Pass 2 — conservation / exhaustiveness checker (C001–C004).
+
+The ``Breakdown`` TIME and COST component names are the ledger's schema:
+every simulated hour and dollar lands under exactly one of them, and the
+totals (``total_time``/``total_cost``) sum the whole registry — that is
+the conservation law the bit-exact bench pins rely on. This pass keeps
+the registry authoritative everywhere it is mirrored:
+
+* **C001** — a component name used in code (``bd.time["x"]``,
+  ``bd.cost["x"]``, ``session.add("x", h)``) that is not in the declared
+  ``TIME_COMPONENTS``/``COST_COMPONENTS`` registry. A typo here silently
+  grows the dict and breaks ``Breakdown.add`` merging.
+* **C002** — a registry component undocumented in ``docs/accounting.md``.
+* **C003** — a registry component absent from ``tools/check_bench.py``:
+  the bench schema gate must know every component the code can emit.
+* **C004** — ``total_time``/``total_cost`` enumerate explicit component
+  keys but miss part of the registry (non-exhaustive total: conservation
+  silently broken). Summing the whole dict is always exhaustive.
+
+Repo-level pass: the registry is parsed from the scanned file that
+declares ``TIME_COMPONENTS`` (``src/repro/core/accounting.py`` in this
+tree); doc/bench mirrors are read from ``root``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+
+def _literal_str_tuple(node: ast.expr) -> Optional[Tuple[str, ...]]:
+    if isinstance(node, ast.Tuple) and all(
+        isinstance(e, ast.Constant) and isinstance(e.value, str) for e in node.elts
+    ):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def _component_literals(node: ast.expr) -> List[ast.Constant]:
+    """String constants used as a component key (handles the
+    ``"a" if cond else "b"`` idiom)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node]
+    if isinstance(node, ast.IfExp):
+        return _component_literals(node.body) + _component_literals(node.orelse)
+    return []
+
+
+class ConservationPass(Pass):
+    name = "conservation"
+    rules = {
+        "C001": "component name not in the declared "
+                "TIME_COMPONENTS/COST_COMPONENTS registry",
+        "C002": "registry component missing from docs/accounting.md",
+        "C003": "registry component missing from tools/check_bench.py "
+                "schema gate",
+        "C004": "total_time/total_cost enumerate components "
+                "non-exhaustively",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if "analysis_fixtures" in parts:
+            return "conservation" in parts or any(
+                p.startswith("conservation") for p in parts
+            )
+        if len(parts) >= 3 and parts[:2] == ("src", "repro"):
+            return parts[2] in ("core", "serve", "dist")
+        return len(parts) >= 1 and parts[0] == "benchmarks"
+
+    # -- registry -----------------------------------------------------------
+
+    def _find_registry(
+        self, files: Sequence[SourceFile]
+    ) -> Tuple[Optional[SourceFile], Optional[ast.Assign], Tuple[str, ...], Tuple[str, ...]]:
+        for f in files:
+            time_comps: Optional[Tuple[str, ...]] = None
+            cost_extra: Tuple[str, ...] = ()
+            anchor: Optional[ast.Assign] = None
+            for node in f.tree.body:
+                if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                    continue
+                tgt = node.targets[0]
+                if not isinstance(tgt, ast.Name):
+                    continue
+                if tgt.id == "TIME_COMPONENTS":
+                    time_comps = _literal_str_tuple(node.value)
+                    anchor = node
+                elif tgt.id == "COST_COMPONENTS":
+                    v = node.value
+                    if (
+                        isinstance(v, ast.BinOp)
+                        and isinstance(v.op, ast.Add)
+                        and isinstance(v.left, ast.Name)
+                        and v.left.id == "TIME_COMPONENTS"
+                    ):
+                        cost_extra = _literal_str_tuple(v.right) or ()
+                    else:
+                        cost_extra = _literal_str_tuple(v) or ()
+            if time_comps is not None:
+                return f, anchor, time_comps, time_comps + cost_extra
+        return None, None, (), ()
+
+    # -- run ----------------------------------------------------------------
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        reg_file, anchor, time_comps, cost_comps = self._find_registry(files)
+        if reg_file is None:
+            return diags  # nothing to enforce against
+        known = set(time_comps) | set(cost_comps)
+
+        for f in files:
+            diags.extend(self._check_usage(f, known))
+
+        diags.extend(self._check_totals(reg_file, time_comps, cost_comps))
+
+        docs = root / "docs" / "accounting.md"
+        if docs.is_file():
+            text = docs.read_text(encoding="utf-8")
+            for comp in cost_comps:
+                if comp not in text:
+                    diags.append(
+                        self.diag(
+                            reg_file,
+                            anchor,
+                            "C002",
+                            f"component '{comp}' is not documented in "
+                            f"docs/accounting.md",
+                            "every ledger component needs its formula in the "
+                            "accounting doc",
+                        )
+                    )
+
+        bench_gate = root / "tools" / "check_bench.py"
+        if bench_gate.is_file():
+            text = bench_gate.read_text(encoding="utf-8")
+            for comp in cost_comps:
+                if comp not in text:
+                    diags.append(
+                        self.diag(
+                            reg_file,
+                            anchor,
+                            "C003",
+                            f"component '{comp}' is unknown to "
+                            f"tools/check_bench.py",
+                            "mirror the registry in check_bench.py so bench "
+                            "JSON breakdowns are schema-checked",
+                        )
+                    )
+        return diags
+
+    def _check_usage(self, f: SourceFile, known: set) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Subscript):
+                v = node.value
+                if (
+                    isinstance(v, ast.Attribute)
+                    and v.attr in ("time", "cost")
+                    and isinstance(node.slice, ast.Constant)
+                    and isinstance(node.slice.value, str)
+                ):
+                    comp = node.slice.value
+                    if comp not in known:
+                        diags.append(
+                            self.diag(
+                                f,
+                                node,
+                                "C001",
+                                f"unknown breakdown component '{comp}'",
+                                "declare it in TIME_COMPONENTS/COST_COMPONENTS "
+                                "(and document it) before use",
+                            )
+                        )
+            elif isinstance(node, ast.Call):
+                func = node.func
+                if (
+                    isinstance(func, ast.Attribute)
+                    and func.attr == "add"
+                    and len(node.args) >= 2
+                ):
+                    for lit in _component_literals(node.args[0]):
+                        if lit.value not in known:
+                            diags.append(
+                                self.diag(
+                                    f,
+                                    lit,
+                                    "C001",
+                                    f"unknown breakdown component "
+                                    f"'{lit.value}' in .add() call",
+                                    "declare it in TIME_COMPONENTS/"
+                                    "COST_COMPONENTS before use",
+                                )
+                            )
+        return diags
+
+    def _check_totals(
+        self,
+        reg_file: SourceFile,
+        time_comps: Tuple[str, ...],
+        cost_comps: Tuple[str, ...],
+    ) -> List[Diagnostic]:
+        """Flag total_time/total_cost that enumerate literal keys but miss
+        registry components (sum(dict.values()) never fires)."""
+        diags: List[Diagnostic] = []
+        targets = {"total_time": set(time_comps), "total_cost": set(cost_comps)}
+        for node in ast.walk(reg_file.tree):
+            if isinstance(node, ast.FunctionDef) and node.name in targets:
+                literals = {
+                    n.value
+                    for n in ast.walk(node)
+                    if isinstance(n, ast.Constant) and isinstance(n.value, str)
+                }
+                if literals:
+                    missing = targets[node.name] - literals
+                    if missing:
+                        diags.append(
+                            self.diag(
+                                reg_file,
+                                node,
+                                "C004",
+                                f"{node.name} enumerates components but "
+                                f"misses {sorted(missing)}",
+                                "sum the whole component dict, or list every "
+                                "registry entry",
+                            )
+                        )
+        return diags

@@ -1,0 +1,191 @@
+"""repro-lint shared core: diagnostics, suppression, source loading, runner.
+
+Every pass is a small ``ast`` visitor that returns :class:`Diagnostic`
+objects through one reporting pipeline:
+
+* ``file:line:col RULE message (hint)`` text output, or ``--format=json``;
+* per-line suppression — append ``# repro-lint: disable=U002`` (comma-
+  separate several rule ids) to the offending line; the comment should
+  also say WHY (which invariant makes the violation intentional);
+* file-level suppression — ``# repro-lint: disable-file=D001`` anywhere
+  in the first 20 lines.
+
+Passes implement the :class:`Pass` protocol: a ``name``, a ``rules``
+catalogue (id -> one-line meaning, mirrored in docs/invariants.md), an
+``applies_to(path)`` scope predicate over repo-relative paths, and
+``run(files, root)``. ``root`` matters for the repo-level passes
+(conservation, pallas P004): tests point it at mini-tree fixtures.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from pathlib import Path
+import re
+from typing import Dict, Iterable, List, Optional, Sequence
+
+REPO = Path(__file__).resolve().parents[2]
+
+_SUPPRESS_LINE_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)"
+)
+_SUPPRESS_FILE_RE = re.compile(
+    r"#\s*repro-lint:\s*disable-file=([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)"
+)
+_FILE_SUPPRESS_SCAN_LINES = 20
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    path: Path
+    line: int
+    col: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def as_dict(self, root: Path) -> Dict[str, object]:
+        try:
+            rel = str(self.path.relative_to(root))
+        except ValueError:
+            rel = str(self.path)
+        return {
+            "path": rel,
+            "line": self.line,
+            "col": self.col,
+            "rule": self.rule,
+            "message": self.message,
+            "hint": self.hint,
+        }
+
+    def format_text(self, root: Path) -> str:
+        d = self.as_dict(root)
+        hint = f"  [{self.hint}]" if self.hint else ""
+        return f"{d['path']}:{d['line']}:{d['col']} {self.rule} {self.message}{hint}"
+
+
+class SourceFile:
+    """One parsed source file plus its suppression comments."""
+
+    def __init__(self, path: Path, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=str(path))
+        self._file_suppressed: set = set()
+        for raw in self.lines[:_FILE_SUPPRESS_SCAN_LINES]:
+            m = _SUPPRESS_FILE_RE.search(raw)
+            if m:
+                self._file_suppressed.update(
+                    r.strip() for r in m.group(1).split(",")
+                )
+
+    @classmethod
+    def load(cls, path: Path) -> "SourceFile":
+        return cls(path, path.read_text(encoding="utf-8"))
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        if rule in self._file_suppressed:
+            return True
+        if 1 <= line <= len(self.lines):
+            m = _SUPPRESS_LINE_RE.search(self.lines[line - 1])
+            if m and rule in {r.strip() for r in m.group(1).split(",")}:
+                return True
+        return False
+
+
+class Pass:
+    """Base class for the five repro-lint passes."""
+
+    name: str = ""
+    rules: Dict[str, str] = {}
+
+    def applies_to(self, path: Path) -> bool:  # repo-relative path
+        raise NotImplementedError
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        raise NotImplementedError
+
+    def diag(
+        self, file: SourceFile, node, rule: str, message: str, hint: str = ""
+    ) -> Diagnostic:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Diagnostic(file.path, line, col, rule, message, hint)
+
+
+def rel_path(path: Path, root: Path) -> Path:
+    try:
+        return path.resolve().relative_to(root.resolve())
+    except ValueError:
+        return path
+
+
+def collect_py_files(paths: Iterable[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            out.extend(
+                f for f in sorted(p.rglob("*.py")) if "__pycache__" not in f.parts
+            )
+    return out
+
+
+def all_passes() -> List[Pass]:
+    from tools.analysis.conservation import ConservationPass
+    from tools.analysis.determinism import DeterminismPass
+    from tools.analysis.pallas import PallasPass
+    from tools.analysis.shardspec import ShardSpecPass
+    from tools.analysis.units import UnitsPass
+
+    return [
+        UnitsPass(),
+        ConservationPass(),
+        DeterminismPass(),
+        PallasPass(),
+        ShardSpecPass(),
+    ]
+
+
+def run_analysis(
+    paths: Optional[Sequence[Path]] = None,
+    root: Path = REPO,
+    only_passes: Optional[Sequence[str]] = None,
+) -> List[Diagnostic]:
+    """Run every (selected) pass over ``paths`` (default: src/ and
+    benchmarks/ under ``root``); returns unsuppressed diagnostics."""
+    if paths is None:
+        paths = [root / "src", root / "benchmarks"]
+    files: List[SourceFile] = []
+    for fp in collect_py_files(paths):
+        files.append(SourceFile.load(fp))
+
+    diags: List[Diagnostic] = []
+    by_path = {f.path.resolve(): f for f in files}
+    for p in all_passes():
+        if only_passes and p.name not in only_passes:
+            continue
+        scoped = [f for f in files if p.applies_to(rel_path(f.path, root))]
+        for d in p.run(scoped, root):
+            src = by_path.get(d.path.resolve())
+            if src is not None and src.suppressed(d.line, d.rule):
+                continue
+            diags.append(d)
+    diags.sort(key=lambda d: (str(d.path), d.line, d.col, d.rule))
+    return diags
+
+
+def render(diags: Sequence[Diagnostic], root: Path, fmt: str = "text") -> str:
+    if fmt == "json":
+        payload = {
+            "tool": "repro-lint",
+            "problems": len(diags),
+            "diagnostics": [d.as_dict(root) for d in diags],
+        }
+        return json.dumps(payload, indent=2, sort_keys=True)
+    lines = [d.format_text(root) for d in diags]
+    lines.append(f"repro-lint: {len(diags)} problem(s)")
+    return "\n".join(lines)

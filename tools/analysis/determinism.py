@@ -1,0 +1,202 @@
+"""Pass 3 — determinism lint (D001–D003).
+
+The simulator's replayable traces, the token-identical serve round trip
+and every bit-exact bench pin assume the core never reads ambient
+entropy. Under ``src/repro/{core,serve,dist}``:
+
+* **D001** — wall-clock reads: ``time.time``/``time_ns``/``monotonic``/
+  ``perf_counter``, ``datetime.now``/``utcnow``/``today``. (The
+  orchestrator's real-segment timing for the ThroughputTracker is the one
+  sanctioned use — suppressed inline with the invariant named.)
+* **D002** — implicit-state RNGs: the stdlib ``random`` module (global
+  Mersenne state) and numpy's legacy global RNG (``np.random.rand``,
+  ``np.random.seed``, ...).
+* **D003** — ``np.random.default_rng(...)`` whose seed does not flow from
+  an explicit ``seed``/``SeedSequence``/``entropy`` value: no-arg
+  construction draws OS entropy; a bare numeric literal hides the seed
+  from the policy/config layer that must own it.
+
+``jax.random`` is exempt by design — JAX PRNG keys are explicit values,
+so determinism is visible in the dataflow.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+_CLOCK_ATTRS = {"time", "time_ns", "monotonic", "perf_counter"}
+_DATETIME_ATTRS = {"now", "utcnow", "today"}
+_NUMPY_LEGACY_RNG = {
+    "rand", "randn", "randint", "random", "random_sample", "seed",
+    "choice", "shuffle", "permutation", "uniform", "normal", "standard_normal",
+}
+_SEEDY_MARKERS = ("seed", "entropy")
+
+
+def _attr_chain(node: ast.expr) -> List[str]:
+    """``np.random.default_rng`` -> ["np", "random", "default_rng"]."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        parts.append("?")
+    return list(reversed(parts))
+
+
+def _seed_flows(node: ast.expr) -> bool:
+    """True when the expression references an explicit seed: a name or
+    attribute containing 'seed'/'entropy', or a SeedSequence construction."""
+    for sub in ast.walk(node):
+        ident: Optional[str] = None
+        if isinstance(sub, ast.Name):
+            ident = sub.id
+        elif isinstance(sub, ast.Attribute):
+            ident = sub.attr
+        elif isinstance(sub, ast.Call):
+            chain = _attr_chain(sub.func)
+            if chain and chain[-1] == "SeedSequence":
+                return True
+        elif isinstance(sub, ast.keyword) and sub.arg:
+            ident = sub.arg
+        if ident and any(m in ident.lower() for m in _SEEDY_MARKERS):
+            return True
+    return False
+
+
+class DeterminismPass(Pass):
+    name = "determinism"
+    rules = {
+        "D001": "wall-clock read in deterministic core "
+                "(time.time/datetime.now/...)",
+        "D002": "implicit-state RNG (stdlib random / numpy legacy global "
+                "RNG)",
+        "D003": "np.random.default_rng without an explicit seed/"
+                "SeedSequence argument",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if "analysis_fixtures" in parts:
+            return "determinism" in parts
+        return (
+            len(parts) >= 3
+            and parts[:2] == ("src", "repro")
+            and parts[2] in ("core", "serve", "dist")
+        )
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for f in files:
+            stdlib_random_names = self._stdlib_random_imports(f)
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func)
+                diags.extend(
+                    self._check_call(f, node, chain, stdlib_random_names)
+                )
+        return diags
+
+    def _stdlib_random_imports(self, f: SourceFile) -> set:
+        """Local names bound to the stdlib random module or its members."""
+        names: set = set()
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        names.add(alias.asname or "random")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    for alias in node.names:
+                        names.add(alias.asname or alias.name)
+        return names
+
+    def _check_call(
+        self,
+        f: SourceFile,
+        node: ast.Call,
+        chain: List[str],
+        stdlib_random_names: set,
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        head, tail = chain[0], chain[-1]
+
+        # D001 — wall clocks
+        if len(chain) >= 2 and chain[-2] == "time" and tail in _CLOCK_ATTRS:
+            diags.append(
+                self.diag(
+                    f, node, "D001",
+                    f"wall-clock read '{'.'.join(chain)}' in deterministic "
+                    f"core",
+                    "thread simulated wall hours through instead; if this "
+                    "measures real execution, suppress with the invariant "
+                    "named",
+                )
+            )
+        elif tail in _DATETIME_ATTRS and "datetime" in chain[:-1]:
+            diags.append(
+                self.diag(
+                    f, node, "D001",
+                    f"wall-clock read '{'.'.join(chain)}'",
+                    "deterministic code cannot read the calendar",
+                )
+            )
+
+        # D002 — implicit-state RNGs
+        elif head in stdlib_random_names and (
+            len(chain) > 1 or tail in stdlib_random_names
+        ):
+            diags.append(
+                self.diag(
+                    f, node, "D002",
+                    f"stdlib random call '{'.'.join(chain)}' uses hidden "
+                    f"global state",
+                    "use np.random.default_rng(seed) threaded from the "
+                    "policy seed",
+                )
+            )
+        elif (
+            len(chain) >= 3
+            and chain[-2] == "random"
+            and tail in _NUMPY_LEGACY_RNG
+        ):
+            diags.append(
+                self.diag(
+                    f, node, "D002",
+                    f"numpy legacy global RNG '{'.'.join(chain)}'",
+                    "construct a Generator: np.random.default_rng(seed)",
+                )
+            )
+
+        # D003 — unseeded / literal-seeded Generator construction
+        elif tail == "default_rng":
+            if not node.args and not node.keywords:
+                diags.append(
+                    self.diag(
+                        f, node, "D003",
+                        "default_rng() draws OS entropy — unseeded",
+                        "pass the policy/config seed (or a SeedSequence "
+                        "derived from it)",
+                    )
+                )
+            else:
+                flows = any(_seed_flows(a) for a in node.args) or any(
+                    _seed_flows(kw.value) for kw in node.keywords
+                )
+                if not flows:
+                    diags.append(
+                        self.diag(
+                            f, node, "D003",
+                            "default_rng seed does not flow from an explicit "
+                            "seed/SeedSequence argument",
+                            "derive the argument from a value named seed*/"
+                            "entropy so ownership is visible",
+                        )
+                    )
+        return diags

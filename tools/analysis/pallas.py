@@ -1,0 +1,370 @@
+"""Pass 4 — Pallas kernel checker (P001–P004).
+
+Static sanity over ``kernels/*/kernel*.py`` (anything the repo lowers
+through ``pl.pallas_call``). TPU Pallas failures here surface as silent
+garbage or compile-time shape errors far from the kernel, so the checker
+pins the contracts at the source:
+
+* **P001** — a ``BlockSpec`` block shape that does not divide the
+  declared ``out_shape`` ref shape (checked where both are integer
+  literals; symbolic dims are skipped — the runtime asserts cover those).
+* **P002** — an ``index_map`` whose arity differs from the grid rank:
+  every grid axis indexes every BlockSpec map, so a missing lambda
+  parameter silently reuses the wrong block.
+* **P003** — Python side effects in a kernel body: ``print``, mutation
+  of closure state (``.append``/``.extend``/``.update`` on names defined
+  outside the kernel), ``global``/``nonlocal``, or ``.at[...]`` on a
+  closure value — the kernel trace runs once at lowering time, so none of
+  these do what they appear to do per grid step.
+* **P004** — a kernel module without its ``ref.py`` counterpart, or whose
+  package is never exercised by ``tests/test_kernels.py``: every
+  ``pallas_call`` needs a pure-XLA reference implementation and a test
+  that diffs against it.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+
+def _attr_tail(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _int_tuple(node: ast.expr) -> Optional[List[Optional[int]]]:
+    """Tuple literal -> per-dim int (None for symbolic dims)."""
+    if not isinstance(node, ast.Tuple):
+        return None
+    out: List[Optional[int]] = []
+    for e in node.elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            out.append(e.value)
+        else:
+            out.append(None)
+    return out
+
+
+def _as_list(node: Optional[ast.expr]) -> List[ast.expr]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+class _FnScope(ast.NodeVisitor):
+    """Assignment map (name -> value expr) per enclosing function body."""
+
+    def __init__(self):
+        self.assigns: Dict[str, ast.expr] = {}
+
+    def visit_Assign(self, node: ast.Assign):
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            self.assigns[node.targets[0].id] = node.value
+        self.generic_visit(node)
+
+
+class PallasPass(Pass):
+    name = "pallas"
+    rules = {
+        "P001": "BlockSpec block shape does not divide the declared ref "
+                "shape",
+        "P002": "index_map arity differs from the grid rank",
+        "P003": "Python side effect in a Pallas kernel body",
+        "P004": "pallas_call kernel without a ref.py counterpart exercised "
+                "by tests/test_kernels.py",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if "analysis_fixtures" in parts:
+            return "pallas" in parts or "kernels" in parts
+        return "kernels" in parts and path.name.startswith("kernel")
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for f in files:
+            assigns = self._module_assigns(f)
+            calls = [
+                n
+                for n in ast.walk(f.tree)
+                if isinstance(n, ast.Call)
+                and _attr_tail(n.func) == "pallas_call"
+            ]
+            for call in calls:
+                scope = self._enclosing_assigns(f, call, assigns)
+                diags.extend(self._check_call(f, call, scope))
+            if calls:
+                diags.extend(self._check_ref_counterpart(f, root))
+        return diags
+
+    # -- resolution helpers -------------------------------------------------
+
+    def _module_assigns(self, f: SourceFile) -> Dict[str, ast.expr]:
+        sc = _FnScope()
+        sc.visit(f.tree)
+        return sc.assigns
+
+    def _enclosing_assigns(
+        self, f: SourceFile, call: ast.Call, fallback: Dict[str, ast.expr]
+    ) -> Dict[str, ast.expr]:
+        # nearest FunctionDef containing the call, by line span
+        best: Optional[ast.FunctionDef] = None
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.FunctionDef):
+                end = getattr(node, "end_lineno", node.lineno)
+                if node.lineno <= call.lineno <= end:
+                    if best is None or node.lineno > best.lineno:
+                        best = node
+        if best is None:
+            return fallback
+        sc = _FnScope()
+        sc.visit(best)
+        merged = dict(fallback)
+        merged.update(sc.assigns)
+        return merged
+
+    def _resolve(
+        self, node: Optional[ast.expr], scope: Dict[str, ast.expr]
+    ) -> Optional[ast.expr]:
+        seen = 0
+        while isinstance(node, ast.Name) and node.id in scope and seen < 5:
+            node = scope[node.id]
+            seen += 1
+        return node
+
+    # -- checks -------------------------------------------------------------
+
+    def _check_call(
+        self, f: SourceFile, call: ast.Call, scope: Dict[str, ast.expr]
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+
+        grid = self._resolve(kw.get("grid"), scope)
+        grid_rank: Optional[int] = None
+        if isinstance(grid, ast.Tuple):
+            grid_rank = len(grid.elts)
+        elif isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+            grid_rank = 1
+
+        in_specs = _as_list(self._resolve(kw.get("in_specs"), scope))
+        out_specs = _as_list(self._resolve(kw.get("out_specs"), scope))
+        out_shapes = _as_list(self._resolve(kw.get("out_shape"), scope))
+
+        # P002: every BlockSpec index_map must take one arg per grid axis
+        if grid_rank is not None:
+            for spec in in_specs + out_specs:
+                spec = self._resolve(spec, scope)
+                lam = self._blockspec_index_map(spec, scope)
+                if lam is not None:
+                    arity = len(lam.args.args)
+                    if arity != grid_rank:
+                        diags.append(
+                            self.diag(
+                                f, lam, "P002",
+                                f"index_map takes {arity} args but the grid "
+                                f"has rank {grid_rank}",
+                                "one index_map parameter per grid axis",
+                            )
+                        )
+
+        # P001: literal block dims must divide literal ref dims
+        for spec, shape in zip(out_specs, out_shapes):
+            spec = self._resolve(spec, scope)
+            shape = self._resolve(shape, scope)
+            block = self._blockspec_shape(spec, scope)
+            ref = self._shapedtype_shape(shape, scope)
+            if block is None or ref is None:
+                continue
+            for i, (b, r) in enumerate(zip(block, ref)):
+                if b is not None and r is not None and b > 0 and r % b != 0:
+                    diags.append(
+                        self.diag(
+                            f, spec if spec is not None else call, "P001",
+                            f"block dim {i} = {b} does not divide ref dim "
+                            f"{r}",
+                            "block shapes must tile the ref exactly (pad in "
+                            "ops.py, not in the kernel)",
+                        )
+                    )
+
+        # P003: kernel body side effects
+        kernel_fn = self._kernel_function(f, call, scope)
+        if kernel_fn is not None:
+            diags.extend(self._check_kernel_body(f, kernel_fn))
+        return diags
+
+    def _blockspec_index_map(
+        self, spec: Optional[ast.expr], scope: Dict[str, ast.expr]
+    ) -> Optional[ast.Lambda]:
+        if not (isinstance(spec, ast.Call) and _attr_tail(spec.func) == "BlockSpec"):
+            return None
+        cand: Optional[ast.expr] = None
+        if len(spec.args) >= 2:
+            cand = spec.args[1]
+        for k in spec.keywords:
+            if k.arg == "index_map":
+                cand = k.value
+        cand = self._resolve(cand, scope)
+        return cand if isinstance(cand, ast.Lambda) else None
+
+    def _blockspec_shape(
+        self, spec: Optional[ast.expr], scope: Dict[str, ast.expr]
+    ) -> Optional[List[Optional[int]]]:
+        if not (isinstance(spec, ast.Call) and _attr_tail(spec.func) == "BlockSpec"):
+            return None
+        cand: Optional[ast.expr] = spec.args[0] if spec.args else None
+        for k in spec.keywords:
+            if k.arg == "block_shape":
+                cand = k.value
+        return _int_tuple(self._resolve(cand, scope))
+
+    def _shapedtype_shape(
+        self, node: Optional[ast.expr], scope: Dict[str, ast.expr]
+    ) -> Optional[List[Optional[int]]]:
+        if not (
+            isinstance(node, ast.Call)
+            and _attr_tail(node.func) == "ShapeDtypeStruct"
+        ):
+            return None
+        cand: Optional[ast.expr] = node.args[0] if node.args else None
+        for k in node.keywords:
+            if k.arg == "shape":
+                cand = k.value
+        return _int_tuple(self._resolve(cand, scope))
+
+    def _kernel_function(
+        self, f: SourceFile, call: ast.Call, scope: Dict[str, ast.expr]
+    ) -> Optional[ast.FunctionDef]:
+        if not call.args:
+            return None
+        target = self._resolve(call.args[0], scope)
+        # functools.partial(kernel_fn, ...)
+        if isinstance(target, ast.Call) and _attr_tail(target.func) == "partial":
+            target = self._resolve(target.args[0] if target.args else None, scope)
+        name: Optional[str] = None
+        if isinstance(target, ast.Name):
+            name = target.id
+        elif isinstance(target, ast.Attribute):
+            name = target.attr
+        if name is None:
+            return None
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.FunctionDef) and node.name == name:
+                return node
+        return None
+
+    def _check_kernel_body(
+        self, f: SourceFile, fn: ast.FunctionDef
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        if fn.args.vararg:
+            params.add(fn.args.vararg.arg)
+        local: set = set(params)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            local.add(n.id)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                if isinstance(node.target, ast.Name):
+                    local.add(node.target.id)
+            elif isinstance(node, ast.FunctionDef) and node is not fn:
+                local.add(node.name)
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                diags.append(
+                    self.diag(
+                        f, node, "P003",
+                        "global/nonlocal mutation inside a kernel body",
+                        "kernel tracing runs once — carry state in VMEM "
+                        "scratch refs",
+                    )
+                )
+            elif isinstance(node, ast.Call):
+                tail = _attr_tail(node.func)
+                if tail == "print":
+                    diags.append(
+                        self.diag(
+                            f, node, "P003",
+                            "print() inside a kernel body",
+                            "use pl.debug_print, or drop the side effect",
+                        )
+                    )
+                elif tail in ("append", "extend", "update") and isinstance(
+                    node.func, ast.Attribute
+                ):
+                    base = node.func.value
+                    if isinstance(base, ast.Name) and base.id not in local:
+                        diags.append(
+                            self.diag(
+                                f, node, "P003",
+                                f"mutates closure '{base.id}.{tail}' inside "
+                                f"a kernel body",
+                                "trace-time mutation runs once, not per grid "
+                                "step",
+                            )
+                        )
+            elif isinstance(node, ast.Subscript):
+                v = node.value
+                if (
+                    isinstance(v, ast.Attribute)
+                    and v.attr == "at"
+                    and isinstance(v.value, ast.Name)
+                    and v.value.id not in local
+                ):
+                    diags.append(
+                        self.diag(
+                            f, node, "P003",
+                            f"functional .at[] update on closure value "
+                            f"'{v.value.id}' inside a kernel body",
+                            "write through the output/scratch ref instead",
+                        )
+                    )
+        return diags
+
+    def _check_ref_counterpart(
+        self, f: SourceFile, root: Path
+    ) -> List[Diagnostic]:
+        """P004 — only for files living in a kernels/<pkg>/ package."""
+        diags: List[Diagnostic] = []
+        parts = f.path.parts
+        if "kernels" not in parts[:-1]:
+            return diags
+        pkg_dir = f.path.parent
+        if pkg_dir.parent.name != "kernels":
+            return diags
+        if not (pkg_dir / "ref.py").is_file():
+            diags.append(
+                Diagnostic(
+                    f.path, 1, 0, "P004",
+                    f"kernel package '{pkg_dir.name}' has no ref.py "
+                    f"reference implementation",
+                    "every pallas_call needs a pure-XLA reference to diff "
+                    "against",
+                )
+            )
+        tests = root / "tests" / "test_kernels.py"
+        if not tests.is_file() or pkg_dir.name not in tests.read_text(
+            encoding="utf-8"
+        ):
+            diags.append(
+                Diagnostic(
+                    f.path, 1, 0, "P004",
+                    f"kernel package '{pkg_dir.name}' is not exercised by "
+                    f"tests/test_kernels.py",
+                    "add a kernel-vs-ref equivalence test",
+                )
+            )
+        return diags

@@ -1,0 +1,297 @@
+"""Pass 5 — sharding-spec checker (S001–S003).
+
+``PartitionSpec`` axis names are stringly-typed: a typo (``"poda"``) or an
+axis the mesh never declares fails only at runtime, deep inside jit, with
+an error that names neither the rule table nor the spec site. This pass
+cross-references every axis-name literal against the axes the scoped tree
+actually declares:
+
+* **S001** — an axis name used in a ``PartitionSpec``/``P`` call or a
+  rule-table entry that no mesh declaration (``jax.make_mesh``, ``Mesh``,
+  ``axis_names=``) in the scanned tree declares.
+* **S002** — the same axis repeated inside one spec or one joint-axes
+  tuple: a mesh axis may partition a tensor at most once.
+* **S003** — a rule-table entry that maps a scan axis (``"layers"``,
+  ``"groups"`` — lax.scan stacking dims) to a non-empty axes tuple: scan
+  dims are never sharded (every device runs every layer).
+
+Declarations and uses are collected repo-wide across the scoped files
+(``src/repro/{dist,launch}``), so the mesh built in ``launch/mesh.py``
+legitimises the rule tables in ``dist/sharding.py``. When the scanned set
+declares no axes at all, S001 stays silent (nothing to enforce against).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+_MESH_BUILDERS = {"make_mesh", "Mesh", "make_production_mesh"}
+_SPEC_NAMES = {"P", "PartitionSpec"}
+_SCAN_AXES = {"layers", "groups"}
+
+
+def _tail(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _str_tuples(node: ast.expr) -> List[Tuple[str, ...]]:
+    """All all-string tuple literals reachable through IfExp branches."""
+    if isinstance(node, ast.Tuple) and all(
+        isinstance(e, ast.Constant) and isinstance(e.value, str)
+        for e in node.elts
+    ):
+        return [tuple(e.value for e in node.elts)]
+    if isinstance(node, ast.IfExp):
+        return _str_tuples(node.body) + _str_tuples(node.orelse)
+    return []
+
+
+class ShardSpecPass(Pass):
+    name = "shardspec"
+    rules = {
+        "S001": "PartitionSpec axis name not declared by any mesh in the "
+                "scanned tree",
+        "S002": "axis repeated within one spec / joint-axes tuple",
+        "S003": "scan axis (layers/groups) mapped to a non-empty sharding "
+                "tuple",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if "analysis_fixtures" in parts:
+            return "shardspec" in parts or "sharding" in parts
+        return (
+            len(parts) >= 3
+            and parts[:2] == ("src", "repro")
+            and parts[2] in ("dist", "launch")
+        )
+
+    # -- declarations --------------------------------------------------------
+
+    def _declared_axes(self, files: Sequence[SourceFile]) -> Set[str]:
+        declared: Set[str] = set()
+        for f in files:
+            # module-wide name -> candidate axis tuples, for the
+            # ``axes = (...) if flag else (...); jax.make_mesh(shape, axes)``
+            # idiom
+            name_tuples: Dict[str, List[Tuple[str, ...]]] = {}
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                    tgt = node.targets[0]
+                    if isinstance(tgt, ast.Name):
+                        tups = _str_tuples(node.value)
+                        if tups:
+                            name_tuples[tgt.id] = tups
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if _tail(node.func) in _MESH_BUILDERS:
+                    for arg in node.args:
+                        for t in _str_tuples(arg):
+                            declared.update(t)
+                        if isinstance(arg, ast.Name):
+                            for t in name_tuples.get(arg.id, []):
+                                declared.update(t)
+                for kw in node.keywords:
+                    if kw.arg == "axis_names":
+                        for t in _str_tuples(kw.value):
+                            declared.update(t)
+                        if isinstance(kw.value, ast.Name):
+                            for t in name_tuples.get(kw.value.id, []):
+                                declared.update(t)
+        return declared
+
+    # -- uses ----------------------------------------------------------------
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        declared = self._declared_axes(files)
+        for f in files:
+            diags.extend(self._check_file(f, declared))
+        return diags
+
+    def _check_file(self, f: SourceFile, declared: Set[str]) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Call):
+                tail = _tail(node.func)
+                if tail in _SPEC_NAMES:
+                    diags.extend(self._check_spec_call(f, node, declared))
+                elif tail == "_rule" or (
+                    tail is not None and "rule" in tail.lower() and node.keywords
+                ):
+                    diags.extend(self._check_rule_kwargs(f, node, declared))
+            elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                value = node.value
+                if value is not None and isinstance(value, ast.Dict):
+                    if self._is_rule_table(node, value):
+                        diags.extend(
+                            self._check_rule_dict(f, value, declared)
+                        )
+        return diags
+
+    def _is_rule_table(self, assign, d: ast.Dict) -> bool:
+        """A rule table: string keys, every value a (possibly empty) tuple
+        of strings — plus either a ``Rule`` annotation or a *RULES*/rule
+        target name."""
+        if not d.keys or not all(
+            isinstance(k, ast.Constant) and isinstance(k.value, str)
+            for k in d.keys
+            if k is not None
+        ):
+            return False
+        values_ok = all(
+            isinstance(v, ast.Tuple)
+            and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in v.elts
+            )
+            for v in d.values
+        )
+        if not values_ok:
+            return False
+        if isinstance(assign, ast.AnnAssign):
+            ann = assign.annotation
+            if _tail(ann) == "Rule":
+                return True
+            tgt = assign.target
+            return isinstance(tgt, ast.Name) and "rule" in tgt.id.lower()
+        for tgt in assign.targets:
+            if isinstance(tgt, ast.Name) and "rule" in tgt.id.lower():
+                return True
+        return False
+
+    def _check_axes(
+        self,
+        f: SourceFile,
+        node: ast.expr,
+        axes: Sequence[str],
+        declared: Set[str],
+        context: str,
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        seen: Set[str] = set()
+        for a in axes:
+            if a in seen:
+                diags.append(
+                    self.diag(
+                        f, node, "S002",
+                        f"axis '{a}' repeated in {context}",
+                        "a mesh axis may partition a tensor at most once",
+                    )
+                )
+            seen.add(a)
+            if declared and a not in declared:
+                diags.append(
+                    self.diag(
+                        f, node, "S001",
+                        f"axis '{a}' in {context} is not declared by any "
+                        f"mesh ({', '.join(sorted(declared))})",
+                        "declare it in the mesh builder or fix the name",
+                    )
+                )
+        return diags
+
+    def _check_spec_call(
+        self, f: SourceFile, call: ast.Call, declared: Set[str]
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        flat: List[str] = []
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                flat.append(arg.value)
+            else:
+                for t in _str_tuples(arg):
+                    # duplicate inside a joint tuple checked per-tuple too
+                    diags.extend(
+                        self._check_axes(
+                            f, arg, t, declared, "a joint-axes tuple"
+                        )
+                    )
+                    flat.extend(t)
+        # cross-slot duplicates (e.g. P("data", ("data", "model")))
+        seen: Set[str] = set()
+        for a in flat:
+            if a in seen:
+                diags.append(
+                    self.diag(
+                        f, call, "S002",
+                        f"axis '{a}' used twice within one PartitionSpec",
+                        "a mesh axis may partition a tensor at most once",
+                    )
+                )
+            seen.add(a)
+            if declared and a not in declared:
+                diags.append(
+                    self.diag(
+                        f, call, "S001",
+                        f"PartitionSpec names axis '{a}' but the mesh "
+                        f"declares ({', '.join(sorted(declared))})",
+                        "declare it in the mesh builder or fix the name",
+                    )
+                )
+        # dedupe: joint-tuple loop may double-report the same S001
+        uniq = []
+        keys = set()
+        for d in diags:
+            k = (d.line, d.col, d.rule, d.message)
+            if k not in keys:
+                keys.add(k)
+                uniq.append(d)
+        return uniq
+
+    def _check_rule_kwargs(
+        self, f: SourceFile, call: ast.Call, declared: Set[str]
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for kw in call.keywords:
+            if kw.arg is None:
+                continue
+            for t in _str_tuples(kw.value):
+                if kw.arg in _SCAN_AXES and t:
+                    diags.append(
+                        self.diag(
+                            f, kw.value, "S003",
+                            f"scan axis '{kw.arg}' mapped to {t!r}",
+                            "lax.scan stacking dims are never sharded — map "
+                            "to ()",
+                        )
+                    )
+                diags.extend(
+                    self._check_axes(
+                        f, kw.value, t, declared, f"rule entry '{kw.arg}'"
+                    )
+                )
+        return diags
+
+    def _check_rule_dict(
+        self, f: SourceFile, d: ast.Dict, declared: Set[str]
+    ) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for k, v in zip(d.keys, d.values):
+            if k is None:
+                continue
+            key = k.value  # string-keyed by _is_rule_table
+            for t in _str_tuples(v):
+                if key in _SCAN_AXES and t:
+                    diags.append(
+                        self.diag(
+                            f, v, "S003",
+                            f"scan axis '{key}' mapped to {t!r}",
+                            "lax.scan stacking dims are never sharded — map "
+                            "to ()",
+                        )
+                    )
+                diags.extend(
+                    self._check_axes(
+                        f, v, t, declared, f"rule entry '{key}'"
+                    )
+                )
+        return diags

@@ -1,0 +1,239 @@
+"""Pass 1 — units-of-measure checker (U001–U003).
+
+A naming-convention dimension system: identifier suffixes declare the
+unit a value is measured in (``*_hours`` vs ``*_seconds``, ``*_bytes`` vs
+``*_gb`` vs ``*_gbps``, ``*_usd``/``*_price``, ``*_tokens``), and
+``a_per_b`` names declare rates. The checker flags:
+
+* **U001** — ``+``/``-``/comparison between two values whose inferred
+  dimensions are BOTH known and differ (``wall_hours > mttr_seconds`` is
+  exactly the bug class that silently rescales every BENCH number).
+  Multiplication/division legitimately change dimension and are not
+  flagged.
+* **U002** — a bare unit-conversion literal (60, 3600, 86400, 1e6, 1e9,
+  1024, 2**30, 1024**3) used in ``*``/``/`` arithmetic. Conversions must
+  go through the named constants in ``repro.core.units`` so there is one
+  greppable home for every factor.
+* **U003** — an accounting call site (``bill_session``, ``settle_leg``,
+  ``leg_state_bytes``, ``Session.add``/``Breakdown.add``) whose argument
+  embeds conversion-literal arithmetic inline: the ledger's entry points
+  must receive values already in canonical units.
+
+Scope: ``src/repro/{core,serve,dist}`` and ``benchmarks/`` —
+``repro/core/units.py`` itself is exempt (it is where the literals live).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+CONVERSION_LITERALS = {
+    60.0,
+    3600.0,
+    86400.0,
+    1e6,
+    1e9,
+    1024.0,
+    float(2**20),
+    float(2**30),
+}
+
+# suffix token -> canonical dimension
+_SUFFIX_DIMS: Dict[str, str] = {
+    "hours": "hours",
+    "hrs": "hours",
+    "seconds": "seconds",
+    "secs": "seconds",
+    "bytes": "bytes",
+    "gb": "gb",
+    "gib": "gib",
+    "gbps": "gbps",
+    "usd": "usd",
+    "dollars": "usd",
+    "price": "usd",
+    "tokens": "tokens",
+}
+
+# denominator tokens accepted inside ``a_per_b`` rate names
+_PER_DENOMS: Dict[str, str] = {
+    "s": "seconds",
+    "sec": "seconds",
+    "secs": "seconds",
+    "second": "seconds",
+    "seconds": "seconds",
+    "h": "hours",
+    "hour": "hours",
+    "hours": "hours",
+}
+
+
+def dim_of_identifier(name: str) -> Optional[str]:
+    """Infer a dimension from an identifier, or None when unsuffixed."""
+    tokens = name.lower().split("_")
+    if "per" in tokens:
+        i = tokens.index("per")
+        num = tokens[i - 1] if i > 0 else ""
+        den = tokens[i + 1] if i + 1 < len(tokens) else ""
+        num_dim = _SUFFIX_DIMS.get(num)
+        den_dim = _PER_DENOMS.get(den) or _SUFFIX_DIMS.get(den)
+        if num_dim and den_dim:
+            return f"{num_dim}/{den_dim}"
+        return None
+    return _SUFFIX_DIMS.get(tokens[-1])
+
+
+def _expr_dim(node: ast.expr) -> Optional[str]:
+    """Conservative dimension inference: only plain names, attributes and
+    calls-of-suffixed-functions carry a dimension; anything composite is
+    unknown (and unknown never fires U001)."""
+    if isinstance(node, ast.Name):
+        return dim_of_identifier(node.id)
+    if isinstance(node, ast.Attribute):
+        return dim_of_identifier(node.attr)
+    if isinstance(node, ast.Call):
+        return _expr_dim(node.func)
+    return None
+
+
+def _is_conversion_literal(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        if isinstance(node.value, bool):
+            return False
+        return float(node.value) in CONVERSION_LITERALS
+    # 2**30-style: a power of small literal ints that lands on a factor
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Pow):
+        left, right = node.left, node.right
+        if (
+            isinstance(left, ast.Constant)
+            and isinstance(right, ast.Constant)
+            and isinstance(left.value, int)
+            and isinstance(right.value, int)
+        ):
+            try:
+                return float(left.value**right.value) in CONVERSION_LITERALS
+            except OverflowError:
+                return False
+    return False
+
+
+_ACCOUNTING_FUNCS = {"bill_session", "settle_leg", "leg_state_bytes"}
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+class UnitsPass(Pass):
+    name = "units"
+    rules = {
+        "U001": "arithmetic or comparison mixes incompatible unit dimensions",
+        "U002": "bare unit-conversion literal in arithmetic "
+                "(use repro.core.units constants)",
+        "U003": "conversion-literal arithmetic inline at an accounting "
+                "call site",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if path.name == "units.py":
+            return False
+        if "analysis_fixtures" in parts:
+            return "units" in parts
+        if len(parts) >= 3 and parts[:2] == ("src", "repro"):
+            return parts[2] in ("core", "serve", "dist")
+        return len(parts) >= 1 and parts[0] == "benchmarks"
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for f in files:
+            diags.extend(self._check_file(f))
+        return diags
+
+    def _check_file(self, f: SourceFile) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        # nodes already reported through U003 don't re-fire as bare U002
+        claimed: set = set()
+
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Call):
+                fname = _call_name(node)
+                is_session_add = (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "add"
+                    and len(node.args) >= 2
+                )
+                if fname in _ACCOUNTING_FUNCS or is_session_add:
+                    for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                        for sub in ast.walk(arg):
+                            if isinstance(sub, ast.BinOp) and isinstance(
+                                sub.op, (ast.Mult, ast.Div)
+                            ):
+                                if _is_conversion_literal(
+                                    sub.left
+                                ) or _is_conversion_literal(sub.right):
+                                    claimed.add(id(sub))
+                                    diags.append(
+                                        self.diag(
+                                            f,
+                                            sub,
+                                            "U003",
+                                            f"unit conversion inline in argument "
+                                            f"to accounting entry point "
+                                            f"'{fname}'",
+                                            "convert via repro.core.units before "
+                                            "the call so the ledger receives "
+                                            "canonical units",
+                                        )
+                                    )
+
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.BinOp):
+                if isinstance(node.op, (ast.Add, ast.Sub)):
+                    ld, rd = _expr_dim(node.left), _expr_dim(node.right)
+                    if ld and rd and ld != rd:
+                        diags.append(
+                            self.diag(
+                                f,
+                                node,
+                                "U001",
+                                f"mixes '{ld}' with '{rd}' in +/- arithmetic",
+                                "convert one side explicitly (see "
+                                "repro.core.units) or rename to the true unit",
+                            )
+                        )
+                elif isinstance(node.op, (ast.Mult, ast.Div)):
+                    if id(node) not in claimed and (
+                        _is_conversion_literal(node.left)
+                        or _is_conversion_literal(node.right)
+                    ):
+                        diags.append(
+                            self.diag(
+                                f,
+                                node,
+                                "U002",
+                                "bare unit-conversion literal in arithmetic",
+                                "name the factor via repro.core.units "
+                                "(SECONDS_PER_HOUR, BYTES_PER_GB, ...)",
+                            )
+                        )
+            elif isinstance(node, ast.Compare) and len(node.ops) == 1:
+                ld = _expr_dim(node.left)
+                rd = _expr_dim(node.comparators[0])
+                if ld and rd and ld != rd:
+                    diags.append(
+                        self.diag(
+                            f,
+                            node,
+                            "U001",
+                            f"compares '{ld}' against '{rd}'",
+                            "convert one side explicitly before comparing",
+                        )
+                    )
+        return diags

@@ -18,10 +18,19 @@ Exit 0 on success; prints each violation and exits 1 otherwise.
 from __future__ import annotations
 
 import json
-import sys
 from pathlib import Path
+import sys
 
 REPO = Path(__file__).resolve().parents[1]
+
+# Mirror of the Breakdown component registry in src/repro/core/accounting.py
+# (TIME_COMPONENTS / COST_COMPONENTS). repro-lint's conservation pass (C003)
+# fails if the code-side registry grows a component this gate does not know.
+KNOWN_TIME_COMPONENTS = (
+    "execution", "re_execution", "checkpointing", "recovery",
+    "reshard", "startup", "slo_violation",
+)
+KNOWN_COST_COMPONENTS = KNOWN_TIME_COMPONENTS + ("billing_buffer",)
 
 ORCH_MODE_KEYS = {
     "useful_steps", "wasted_steps", "revocations", "goodput", "cost_usd",
@@ -102,6 +111,30 @@ def check_serve(errors, name, data):
                      f"{name}: scenario {sid}.{p} missing {sorted(missing)}")
 
 
+def check_breakdowns(errors, name, data, path="", depth=0):
+    """Any ``time_breakdown``/``cost_breakdown`` dict a bench report carries
+    must use only registry component names — the same conservation law
+    repro-lint's C-rules enforce on the code side."""
+    if depth > 6 or not isinstance(data, dict):
+        return
+    for key, val in data.items():
+        here = f"{path}.{key}" if path else key
+        if key in ("time_breakdown", "cost_breakdown") and isinstance(val, dict):
+            known = (
+                KNOWN_TIME_COMPONENTS
+                if key == "time_breakdown"
+                else KNOWN_COST_COMPONENTS
+            )
+            unknown = set(val) - set(known)
+            _require(errors, not unknown,
+                     f"{name}: {here} has unknown components {sorted(unknown)}")
+        if isinstance(val, dict):
+            check_breakdowns(errors, name, val, here, depth + 1)
+        elif isinstance(val, list):
+            for i, item in enumerate(val):
+                check_breakdowns(errors, name, item, f"{here}[{i}]", depth + 1)
+
+
 def check_generic(errors, name, data):
     _require(errors, isinstance(data, dict), f"{name}: top level must be an object")
     if isinstance(data, dict) and isinstance(data.get("scenarios"), list):
@@ -114,9 +147,9 @@ CHECKERS = {
 }
 
 
-def main() -> int:
+def main(root: Path = REPO) -> int:
     errors: list = []
-    found = sorted(REPO.glob("BENCH_*.json"))
+    found = sorted(root.glob("BENCH_*.json"))
     if not found:
         errors.append("no BENCH_*.json found at the repo root")
     for path in found:
@@ -127,6 +160,8 @@ def main() -> int:
             errors.append(f"{name}: invalid JSON ({e})")
             continue
         CHECKERS.get(name, check_generic)(errors, name, data)
+        if isinstance(data, dict):
+            check_breakdowns(errors, name, data)
 
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)

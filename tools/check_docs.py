@@ -11,9 +11,9 @@ Exit code 0 on success; prints each broken link and exits 1 otherwise.
 """
 from __future__ import annotations
 
+from pathlib import Path
 import re
 import sys
-from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[1]
 REQUIRED = [
@@ -21,6 +21,7 @@ REQUIRED = [
     "docs/trace-format.md",
     "docs/accounting.md",
     "docs/serving.md",
+    "docs/invariants.md",
 ]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
@@ -29,22 +30,22 @@ SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
 SKIP_FILES = {"SNIPPETS.md"}
 
 
-def md_files():
-    for p in sorted(REPO.rglob("*.md")):
+def md_files(root: Path = REPO):
+    for p in sorted(root.rglob("*.md")):
         if p.name in SKIP_FILES:
             continue
         if not any(part in SKIP_DIRS for part in p.parts):
             yield p
 
 
-def main() -> int:
+def main(root: Path = REPO) -> int:
     errors = []
     for rel in REQUIRED:
-        if not (REPO / rel).is_file():
+        if not (root / rel).is_file():
             errors.append(f"missing required doc: {rel}")
 
     n_links = 0
-    for md in md_files():
+    for md in md_files(root):
         for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
             if target.startswith(("http://", "https://", "mailto:", "#")):
                 continue
@@ -53,13 +54,13 @@ def main() -> int:
             resolved = (md.parent / path).resolve()
             if not resolved.exists():
                 errors.append(
-                    f"{md.relative_to(REPO)}: broken link -> {target}"
+                    f"{md.relative_to(root)}: broken link -> {target}"
                 )
 
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     print(f"checked {n_links} relative links across "
-          f"{len(list(md_files()))} markdown files; "
+          f"{len(list(md_files(root)))} markdown files; "
           f"{len(errors)} problem(s)")
     return 1 if errors else 0
 
