@@ -23,11 +23,18 @@ Asserted, not narrated (the run aborts on violation):
   revocation's full restore — and strictly fewer than the TRAINING
   path's restore (opt state never moves for serving).
 
+``--kernels`` adds a hot-path microbench to the same JSON: tokens/sec for
+dense prefill and for single-token decode against the paged KV pool
+(block-table gather over OCCUPIED pages only) vs the dense max-context
+cache, at batch 1 and 4. Asserted: paged ≥ dense-jnp at batch ≥ 4 — the
+paged layout must pay for its gather with real throughput, not just
+memory. ``tools/check_bench.py`` re-checks the committed numbers.
+
 Besides the CSV on stdout, writes machine-readable ``BENCH_serve.json``
 (monotonic scenario ids, schema enforced by ``tools/check_bench.py``) so
 the serving perf trajectory is tracked across PRs like the orchestrator's.
 
-    python benchmarks/serve_bench.py [--quick]
+    python benchmarks/serve_bench.py [--quick] [--kernels]
 """
 from __future__ import annotations
 
@@ -69,6 +76,133 @@ def build_workload():
         cache_bytes=sb - pb,
         inflight_context_tokens=4 * 256.0,
     )
+
+
+def kernel_bench(quick: bool = False) -> dict:
+    """Serving hot-path microbench on the real reduced model: dense prefill
+    tokens/sec plus single-token decode tokens/sec for the paged KV pool
+    (``decode_step_paged``: attention over occupied pages via block-table
+    gather) vs the dense max-context cache (``decode_step``: attention
+    over all ``max_context`` slots). Both decode paths are the pure-jnp
+    reference implementations, so the comparison isolates the cache
+    LAYOUT, not Pallas codegen (kernel≡ref identity is pinned separately
+    in tests/test_kernels.py). Timings are best-of-``repeats`` over
+    ``steps`` jitted decode calls, measured after warmup."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import ShardingLayout, get_arch
+    from repro.models import build_model
+    from repro.models.layers import PAGE_SIZE
+    from repro.train.steps import (
+        build_decode_step,
+        build_paged_decode_step,
+        build_prefill_step,
+    )
+
+    cfg = get_arch("qwen3-4b").reduced()
+    model = build_model(cfg)
+    layout = ShardingLayout()
+    params = jax.device_put(model.init(jax.random.key(0)))
+
+    S, total = 32, 256
+    steps = 8 if quick else 32
+    repeats = 2 if quick else 3
+
+    def _time_decode(step, cache, tok, extra):
+        """Best-of-``repeats`` wall time for ``steps`` decode calls; the
+        donated cache threads through so every call is a real step."""
+        best = math.inf
+        pos = S
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                logits, cache = step(params, cache, tok, *extra(pos))
+                pos += 1
+            jax.block_until_ready(logits)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    rows = []
+    for B in (1, 4):
+        rng = np.random.RandomState(0)
+        batch = {
+            "tokens": jnp.asarray(
+                rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32
+            )
+        }
+        prefill = jax.jit(build_prefill_step(model, layout, total))
+        logits, cache = jax.block_until_ready(prefill(params, batch))  # warmup
+        t0 = time.perf_counter()
+        logits, cache = jax.block_until_ready(prefill(params, batch))
+        t_prefill = time.perf_counter() - t0
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+        # dense: every step attends over all `total` cache slots
+        decode = jax.jit(build_decode_step(model, layout), donate_argnums=(1,))
+        for i in range(2):  # warmup (compile + donation steady state)
+            logits, cache = decode(params, cache, tok, jnp.int32(S + i))
+        jax.block_until_ready(logits)
+        t_dense = _time_decode(
+            decode, cache, tok, lambda pos: (jnp.int32(pos),)
+        )
+
+        # paged: every step attends over ceil(len/PAGE_SIZE) occupied pages
+        per = math.ceil((S + steps + 4) / PAGE_SIZE)
+        pcache = model.init_paged_cache(B * per + 1)
+        table = jnp.asarray(
+            np.arange(B * per, dtype=np.int32).reshape(B, per)
+        )
+        pdecode = jax.jit(
+            build_paged_decode_step(model, layout), donate_argnums=(1,)
+        )
+        lens = np.full((B,), S, np.int32)
+        for _ in range(2):  # warmup
+            logits, pcache = pdecode(
+                params, pcache, tok, jnp.asarray(lens), table
+            )
+            lens += 1
+        jax.block_until_ready(logits)
+        pos_lens = {"v": lens}
+
+        def _paged_extra(pos, _pl=pos_lens, _table=table):
+            out = (jnp.asarray(_pl["v"]), _table)
+            _pl["v"] = _pl["v"] + 1
+            return out
+
+        t_paged = _time_decode(pdecode, pcache, tok, _paged_extra)
+
+        row = {
+            "batch": B,
+            "prefill_tokens_per_sec": round(B * S / t_prefill, 1),
+            "decode_dense_tokens_per_sec": round(B * steps / t_dense, 1),
+            "decode_paged_tokens_per_sec": round(B * steps / t_paged, 1),
+        }
+        rows.append(row)
+        print(
+            f"# kernel_bench batch {B}: prefill "
+            f"{row['prefill_tokens_per_sec']:.0f} tok/s, decode dense "
+            f"{row['decode_dense_tokens_per_sec']:.0f} vs paged "
+            f"{row['decode_paged_tokens_per_sec']:.0f} tok/s"
+        )
+        # the acceptance inequality: at serving batch sizes the paged pool
+        # must beat attending over the dense max-context over-allocation
+        if B >= 4:
+            assert (
+                row["decode_paged_tokens_per_sec"]
+                >= row["decode_dense_tokens_per_sec"]
+            ), row
+
+    return {
+        "prompt_len": S,
+        "max_context": total,
+        "decode_steps": steps,
+        "page_size": PAGE_SIZE,
+        "backend": jax.default_backend(),
+        "batches": rows,
+    }
 
 
 def traces(hours: int):
@@ -131,9 +265,10 @@ def rep_json(rep):
     }
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, kernels: bool = False) -> None:
     from repro.core import generate_markets, split_history_future
 
+    kb = kernel_bench(quick) if kernels else None
     wl = build_workload()
     days = 3 if quick else 13
     hours = 24 * days
@@ -172,7 +307,7 @@ def main(quick: bool = False) -> None:
             f"{static.restored_bytes} B"
         )
 
-    BENCH_JSON.write_text(json.dumps({
+    payload = {
         "bench": "serve",
         "quick": quick,
         "workload": {
@@ -182,11 +317,16 @@ def main(quick: bool = False) -> None:
             "cache_bytes": wl.cache_bytes,
         },
         "scenarios": scenarios,
-    }, indent=1) + "\n")
+    }
+    if kb is not None:
+        payload["kernel_bench"] = kb
+    BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
     print(f"# wrote {BENCH_JSON.relative_to(REPO_ROOT)}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="3-day smoke run")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also run the paged-vs-dense decode microbench")
     main(**vars(ap.parse_args()))

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the model zoo's compute hot spots.
 
 flash_attention/  blockwise online-softmax attention (causal, SWA, GQA)
+paged_attention/  decode attention over a paged KV block pool (serving)
 ssm_scan/         chunked Mamba selective scan
 mlstm/            chunkwise-parallel xLSTM matrix-memory cell
 
@@ -10,10 +11,15 @@ on CPU; the TPU target uses the same BlockSpecs with VMEM tiling.
 """
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.mlstm import mlstm, mlstm_chunkwise, mlstm_ref
+from repro.kernels.paged_attention import (
+    paged_attention_ref,
+    paged_decode_attention,
+)
 from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
 
 __all__ = [
     "attention_ref", "flash_attention",
     "mlstm", "mlstm_chunkwise", "mlstm_ref",
+    "paged_attention_ref", "paged_decode_attention",
     "ssm_scan", "ssm_scan_ref",
 ]

@@ -1,0 +1,145 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+One decode token per sequence attends over that sequence's pages of a
+shared KV block pool (vLLM-style paged KV cache). The physical page for
+grid step (b, h, j) is read from the *scalar-prefetched* block table
+inside the k/v BlockSpec index maps — ``pltpu.PrefetchScalarGridSpec``
+makes ``block_table``/``seq_lens`` available before the kernel body runs,
+so the DMA engine fetches exactly the pages the sequence occupies and the
+HBM traffic is O(seq_len), not O(max_context) like the dense-cache decode
+path.
+
+Grid: (B, KVH, max_blocks) with the page axis innermost — a TPU Pallas
+grid executes sequentially per core, so the online-softmax state (m, l,
+acc) for the (G = H/KVH)-head query group lives in VMEM scratch and is
+carried across pages, exactly like the prefill flash kernel. Pages past
+``seq_lens[b]`` are skipped with ``pl.when`` (unassigned table entries
+are clamped to page 0 in the index map; the mask keeps them out of the
+math). A dead lane (seq_len 0) runs no page and finalizes to a zero
+vector — deterministic, and never read by the engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    bt_ref, sl_ref,                 # scalar-prefetch: block table, seq lens
+    q_ref, k_ref, v_ref,            # VMEM tiles
+    o_ref,                          # output tile
+    m_scr, l_scr, acc_scr,          # VMEM scratch carried over the page axis
+    *,
+    sm_scale: float,
+    page_size: int,
+    n_blocks: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = sl_ref[b]
+    base = j * page_size
+
+    @pl.when(base < seq_len)
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (ps, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                      # (G, ps)
+        k_pos = base + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, dimension=1
+        )
+        s = jnp.where(k_pos < seq_len, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (G, 1)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # (G, ps)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                 # (G, hd)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,            # (B, H, hd)
+    k_pages: jax.Array,      # (P, page_size, KVH, hd)
+    v_pages: jax.Array,      # (P, page_size, KVH, hd)
+    block_table: jax.Array,  # (B, max_blocks) int32
+    seq_lens: jax.Array,     # (B,) int32
+    *,
+    sm_scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged decode attention over a shared block pool. Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    page_size, KVH = k_pages.shape[1], k_pages.shape[2]
+    n_blocks = block_table.shape[1]
+    G = H // KVH
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(hd)
+
+    q4 = q.reshape(B, KVH, G, hd)
+    kernel = functools.partial(
+        _paged_kernel,
+        sm_scale=scale,
+        page_size=page_size,
+        n_blocks=n_blocks,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, n_blocks),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, G, hd), lambda b, h, j, bt, sl: (b, h, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, hd),
+                lambda b, h, j, bt, sl: (jnp.maximum(bt[b, j], 0), 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, hd),
+                lambda b, h, j, bt, sl: (jnp.maximum(bt[b, j], 0), 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, h, j, bt, sl: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q4, k_pages, v_pages)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Gathers each sequence's pages through its block table and runs exact
+masked softmax attention over the gathered positions — O(max_blocks ·
+page_size) memory per sequence, fine at test shapes, exact math for the
+allclose sweeps AND the model-side jnp fallback (``models/layers.py``
+calls this directly on backends without Pallas).
+
+Layout contract (shared with kernel.py / ops.py):
+
+* ``q``           — (B, H, hd): one decode token per sequence, head-major
+  after the model's (B, 1, H, hd) squeeze;
+* ``k_pages``/``v_pages`` — (P, page_size, KVH, hd): the shared block
+  pool; a page holds ``page_size`` consecutive token positions of ONE
+  sequence;
+* ``block_table`` — (B, max_blocks) int32: ``block_table[b, j]`` is the
+  pool page holding positions ``[j·page_size, (j+1)·page_size)`` of
+  sequence ``b``; ``-1`` = unassigned (clamped to page 0 and masked);
+* ``seq_lens``    — (B,) int32: valid positions per sequence (0 = dead
+  lane; its output is a deterministic zero-information vector that the
+  engine never reads).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jax.Array,            # (B, H, hd)
+    k_pages: jax.Array,      # (P, page_size, KVH, hd)
+    v_pages: jax.Array,      # (P, page_size, KVH, hd)
+    block_table: jax.Array,  # (B, max_blocks) int32
+    seq_lens: jax.Array,     # (B,) int32
+    *,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    page_size, KVH = k_pages.shape[1], k_pages.shape[2]
+    max_blocks = block_table.shape[1]
+    G = H // KVH
+    T = max_blocks * page_size
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(hd)
+
+    tbl = jnp.maximum(block_table, 0)                       # clamp -1
+    k = jnp.take(k_pages, tbl, axis=0)                      # (B, nb, ps, KVH, hd)
+    v = jnp.take(v_pages, tbl, axis=0)
+    k = k.reshape(B, T, KVH, hd)
+    v = v.reshape(B, T, KVH, hd)
+
+    qg = q.reshape(B, KVH, G, hd).astype(jnp.float32)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale                                               # (B, KVH, G, T)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    valid = kv_pos[None, :] < seq_lens[:, None]             # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    # dead lanes (seq_len 0): softmax over an all-masked row is uniform, so
+    # zero the output explicitly to match the kernel's finalize semantics
+    o = jnp.where(seq_lens[:, None, None, None] > 0, o, 0.0)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -86,6 +86,93 @@ def _serve_steps(model, cfg, layout, mesh, batch, total, int8):
     return p_sh, c_sh, in_sh, prefill, decode
 
 
+def engine_plan_main(args) -> None:
+    """Serve on ElasticMeshManager plans through the continuous-batching
+    decode engine (paged KV pool). A revocation sheds every in-flight
+    request from the dying engine and resumes it — committed tokens
+    included — on a fresh engine over the replacement plan, with the same
+    params-only byte accounting as the legacy path (the paged pool always
+    follows drop-and-reprefill semantics: pages die with the instance)."""
+    from repro.dist import ElasticMeshManager, reshard_tree
+    from repro.dist.meshplan import ThroughputTracker
+    from repro.models.layers import PAGE_SIZE
+    from repro.serve.engine import DecodeEngine, Request
+    from repro.serve.migrate import (
+        assert_params_only,
+        replica_param_bytes_moved,
+    )
+
+    if args.cache_policy != "drop":
+        raise SystemExit("--engine supports --cache-policy drop only "
+                         "(pool pages die with the instance)")
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    layout = ShardingLayout(int8_kv_cache=args.int8_cache)
+    man = ElasticMeshManager()
+    counts = [int(x) for x in args.plan.split(",")]
+    tracker = ThroughputTracker()
+
+    B, S = args.batch, args.prompt_len
+    total = S + args.new_tokens
+    num_pages = B * (-(-total // PAGE_SIZE)) + 1
+    prompts = np.asarray(_serve_batch(cfg, B, S)["tokens"])
+    params_host = model.init(jax.random.key(0))
+
+    plan = man.plan_for(counts[0])
+    engine = DecodeEngine(
+        model, layout, plan.mesh, lanes=B, num_pages=num_pages,
+        max_context=total, tracker=tracker, tracker_key=plan.key,
+    )
+    params = jax.device_put(params_host, engine.param_sh)
+    for b in range(B):
+        engine.submit(Request(rid=b, prompt=prompts[b],
+                              max_new_tokens=args.new_tokens))
+    print(f"plan[0]: {plan.device_count} devices, mesh {plan.mesh_shape} "
+          f"(engine: {B} lanes, {num_pages} pages)")
+
+    migrated = {"params_bytes": 0, "cache_bytes": 0, "train_path_bytes": 0,
+                "migrated_at": None, "cache_policy": "drop"}
+    revoke_after = args.revoke_after if len(counts) > 1 else 0
+    i = 0
+    while engine.in_flight:
+        if revoke_after and i == revoke_after:
+            resumed = engine.shed()
+            plan = man.plan_for(counts[1])
+            engine = DecodeEngine(
+                model, layout, plan.mesh, lanes=B, num_pages=num_pages,
+                max_context=total, tracker=tracker, tracker_key=plan.key,
+            )
+            moved = replica_param_bytes_moved(params, engine.param_sh)
+            params = reshard_tree(params, engine.param_sh)
+            migrated["params_bytes"] = moved
+            migrated["train_path_bytes"] = assert_params_only(moved, model)
+            migrated["migrated_at"] = i
+            for req in resumed:
+                engine.submit(req)
+            print(
+                f"revoked after step {i}: shed {len(resumed)} streams, "
+                f"resumed on {plan.device_count} devices, mesh "
+                f"{plan.mesh_shape}; params-only {migrated['params_bytes']} B "
+                f"< train path {migrated['train_path_bytes']} B"
+            )
+        engine.step(params)
+        i += 1
+
+    done = {c.rid: c.tokens for c in engine.completions}
+    rows = np.asarray([done[b] for b in range(B)], np.int32)
+    sps = {f"{k[1][0]}x{k[1][1]}": round(v, 3) for k, v in tracker.measured.items()}
+    print("first row:", rows[0].tolist())
+    print("PLAN_JSON " + json.dumps({
+        "plans": counts,
+        "engine": True,
+        "tokens": rows.tolist(),
+        "measured_steps_per_sec": sps,
+        "engine_tokens_per_sec": round(engine.measured_tokens_per_sec, 3),
+        **migrated,
+    }))
+
+
 def plan_main(args) -> None:
     """Serve on ElasticMeshManager plans with a live shape migration."""
     from repro.dist import ElasticMeshManager, reshard_tree
@@ -218,9 +305,17 @@ def main() -> None:
                     default="drop",
                     help="on migration: drop the KV cache and re-prefill, "
                          "or reshard it over the DCN")
+    ap.add_argument("--engine", action="store_true",
+                    help="with --plan: serve through the continuous-batching "
+                         "decode engine (paged KV pool) instead of the "
+                         "lock-step dense-cache loop")
     args = ap.parse_args()
+    if args.plan and args.engine:
+        return engine_plan_main(args)
     if args.plan:
         return plan_main(args)
+    if args.engine:
+        raise SystemExit("--engine requires --plan")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)

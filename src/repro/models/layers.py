@@ -490,6 +490,167 @@ def decode_attention(
     return y, new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (serving decode)
+# ---------------------------------------------------------------------------
+
+PAGE_SIZE = 16  # token positions per pool page; matches cache_len_for's ×16
+
+
+def make_paged_cache_specs(
+    cfg: ModelConfig, num_pages: int, page_size: int = PAGE_SIZE,
+    int8: bool = False,
+) -> Dict:
+    """Abstract paged-KV pool entry for ONE layer (stacked by caller).
+
+    The pool is shared across all sequences: ``num_pages`` fixed-size
+    blocks of ``page_size`` consecutive token positions each. Host-side
+    per-sequence block tables (int32, -1 = unassigned) map logical
+    position ranges to pool pages, replacing the dense
+    ``(B, cache_len, KVH, hd)`` max-context over-allocation — HBM scales
+    with *occupied* tokens, and the continuous-batching engine admits new
+    sequences against pool occupancy instead of a static batch ceiling.
+    The last pool page is reserved as a trash page: dead decode lanes
+    write there and it is never allocated or attended to.
+    """
+    hd = cfg.resolved_head_dim
+    kv_dtype = "int8" if int8 else cfg.dtype
+    spec = {
+        "k_pages": ParamSpec((num_pages, page_size, cfg.num_kv_heads, hd),
+                             (None, None, "kv_heads", "head_dim"),
+                             init="zeros", dtype=kv_dtype),
+        "v_pages": ParamSpec((num_pages, page_size, cfg.num_kv_heads, hd),
+                             (None, None, "kv_heads", "head_dim"),
+                             init="zeros", dtype=kv_dtype),
+    }
+    if int8:
+        spec["k_scale"] = ParamSpec((num_pages, page_size, cfg.num_kv_heads, 1),
+                                    (None, None, "kv_heads", None),
+                                    init="zeros", dtype=cfg.dtype)
+        spec["v_scale"] = ParamSpec((num_pages, page_size, cfg.num_kv_heads, 1),
+                                    (None, None, "kv_heads", None),
+                                    init="zeros", dtype=cfg.dtype)
+    return spec
+
+
+def _paged_write(pages: jax.Array, new: jax.Array, rows: jax.Array) -> jax.Array:
+    """Scatter one token per sequence into the flattened pool.
+
+    pages: (P, ps, ...); new: (B, ...); rows: (B,) flattened pool rows.
+    Live rows are unique by construction (one page owner per range); only
+    trash-page rows may collide, and those are never read back.
+    """
+    P, ps = pages.shape[:2]
+    flat = pages.reshape(P * ps, *pages.shape[2:])
+    flat = flat.at[rows].set(new.astype(pages.dtype))
+    return flat.reshape(pages.shape)
+
+
+def _paged_attend_gathered(
+    q: jax.Array, k: jax.Array, v: jax.Array, lens: jax.Array
+) -> jax.Array:
+    """Exact masked attention of one decode token over gathered pages.
+
+    q: (B, H, hd); k/v: (B, T, KVH, hd) already gathered (and dequantized
+    if int8) through the block table; lens: (B,) valid positions.
+    """
+    B, H, hd = q.shape
+    KVH = k.shape[2]
+    qg = q.reshape(B, 1, KVH, H // KVH, hd)
+    T = k.shape[1]
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    mask = (kv_pos[None, :] < lens[:, None])[:, None, :]  # (B, 1, T)
+    out = _sdpa(qg, k, v, mask, 1.0 / np.sqrt(hd))
+    return out.reshape(B, H, hd)
+
+
+def decode_attention_paged(
+    params: Dict,
+    cache: Dict,
+    x: jax.Array,
+    seq_lens: jax.Array,     # (B,) int32: tokens already cached per lane
+    block_table: jax.Array,  # (B, max_blocks) int32; -1 = unassigned
+    cfg: ModelConfig,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """One-token attention against the shared paged KV pool.
+
+    x: (B, 1, d). ``seq_lens[b]`` is both the number of cached tokens and
+    the absolute position of this token for lane b (continuous batching:
+    lanes advance independently, so position is a vector, not a scalar).
+    A dead lane (unassigned page at its write index) redirects its write
+    to the reserved trash page and attends over zero positions, producing
+    a deterministic output the engine never reads.
+
+    ``use_kernel`` dispatches to the Pallas kernel (bf16/f32 pools only);
+    the default is the pure-jnp oracle, and int8 pools always take the
+    gather path with dequantization scoped to the gathered pages —
+    O(seq_len) dequant per token, unlike the dense ``decode_attention``
+    path which dequantizes the whole cache each step.
+    """
+    from repro.kernels.paged_attention import (
+        paged_attention_ref, paged_decode_attention,
+    )
+
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    KVH = cfg.num_kv_heads
+    k_pages = cache["k_pages"]
+    P, ps = k_pages.shape[:2]
+    int8 = k_pages.dtype == jnp.int8
+
+    pos = seq_lens.astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    q = rope(q, pos[:, None].astype(jnp.float32), cfg.rope_theta)
+    k_new = rope(k_new, pos[:, None].astype(jnp.float32), cfg.rope_theta)
+
+    pidx = jnp.clip(pos // ps, 0, block_table.shape[1] - 1)
+    page = jnp.take_along_axis(block_table, pidx[:, None], axis=1)[:, 0]
+    live = page >= 0
+    dest = jnp.where(live, page, P - 1)  # trash page for dead lanes
+    rows = dest * ps + pos % ps
+
+    new_cache = dict(cache)
+    if int8:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        new_cache["k_pages"] = _paged_write(cache["k_pages"], kq[:, 0], rows)
+        new_cache["v_pages"] = _paged_write(cache["v_pages"], vq[:, 0], rows)
+        new_cache["k_scale"] = _paged_write(cache["k_scale"], ks[:, 0], rows)
+        new_cache["v_scale"] = _paged_write(cache["v_scale"], vs[:, 0], rows)
+    else:
+        new_cache["k_pages"] = _paged_write(cache["k_pages"], k_new[:, 0], rows)
+        new_cache["v_pages"] = _paged_write(cache["v_pages"], v_new[:, 0], rows)
+
+    lens_att = jnp.where(live, pos + 1, 0).astype(jnp.int32)
+    q3 = q[:, 0]  # (B, H, hd)
+    if int8:
+        tbl = jnp.maximum(block_table, 0)
+        T = tbl.shape[1] * ps
+        kg = jnp.take(new_cache["k_pages"], tbl, axis=0)
+        vg = jnp.take(new_cache["v_pages"], tbl, axis=0)
+        ksg = jnp.take(new_cache["k_scale"], tbl, axis=0)
+        vsg = jnp.take(new_cache["v_scale"], tbl, axis=0)
+        k_use = _dequantize_kv(kg, ksg, q.dtype).reshape(B, T, KVH, hd)
+        v_use = _dequantize_kv(vg, vsg, q.dtype).reshape(B, T, KVH, hd)
+        out = _paged_attend_gathered(q3, k_use, v_use, lens_att)
+    elif use_kernel:
+        out = paged_decode_attention(
+            q3, new_cache["k_pages"], new_cache["v_pages"],
+            block_table, lens_att, interpret=interpret,
+        )
+    else:
+        out = paged_attention_ref(
+            q3, new_cache["k_pages"], new_cache["v_pages"],
+            block_table, lens_att,
+        )
+    out = out.reshape(B, 1, cfg.num_heads * hd)
+    y = common.dense(out, params["wo"], cfg.dtype)
+    return y, new_cache
+
+
 def _constrain_qkv(q, k, v, opts):
     # gather ONLY K and V (once per layer); Q keeps its sequence sharding so
     # the attention FLOPs still partition over the model axis by q rows

@@ -164,6 +164,7 @@ def moe_decode_block(
     pos: jax.Array,
     cfg: ModelConfig,
     constrain=None,
+    packing: str = "sequence",
 ) -> Tuple[jax.Array, jax.Array]:
     """Single-token MoE step with forward-consistent capacity routing.
 
@@ -178,13 +179,19 @@ def moe_decode_block(
     routes with fresh capacity and diverges from the forward whenever an
     expert overflows (the seed's phi3.5-moe prefill/decode failure).
 
-    The scatter packing still bounds the expert buffers with a static
-    capacity derived from the *decode batch* (cf-scaled over B tokens).
-    Only counter-kept assignments consume slots, but when MORE than
-    ``c_pack`` sequences route a kept assignment to the same expert in one
-    step, the overflow IS dropped — a cross-sequence deviation from the
-    teacher-forced forward that per-sequence packing groups would remove
-    (ROADMAP open item). B=1 decode is always exact.
+    ``packing`` selects how assignments are packed into expert buffers:
+
+    * ``"sequence"`` (default) — one group per sequence, mirroring the
+      full forward's train/prefill grouping. Top-k experts are distinct
+      within a token, so one buffer slot per (sequence, expert) can never
+      overflow: keep/drop is decided by the counters ALONE, and a batched
+      decode step serves exactly the tokens a per-sequence decode would.
+    * ``"global"`` — legacy single global group with a static
+      ``c_pack = ceil(k · cf · B / E)`` capacity over the decode batch.
+      When more than ``c_pack`` sequences route a counter-kept assignment
+      to the same expert in one step, the overflow IS dropped — a
+      cross-sequence deviation from the teacher-forced forward, pinned as
+      a regression in tests/test_moe_decode_load.py. B=1 is always exact.
     """
     if constrain is None:
         constrain = lambda t, name: t
@@ -207,17 +214,33 @@ def moe_decode_block(
     ).astype(jnp.int32)
     prior = jnp.take_along_axis(load, top_i, axis=1)             # (B, K)
     keep = prior < c_seq
-    a = top_i.reshape(1, B * K)
-    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)               # (1, B*K, E)
-    new_load = load + jnp.sum(onehot.reshape(B, K, E), axis=1).astype(load.dtype)
+    onehot_seq = jax.nn.one_hot(top_i, E, dtype=jnp.int32)       # (B, K, E)
+    new_load = load + jnp.sum(onehot_seq, axis=1).astype(load.dtype)
 
-    # --- pack all B decode tokens into per-expert buffers (one global group);
-    # counter-dropped assignments consume no slots (handled in the core)
-    c_pack = max(int(np.ceil(K * m.capacity_factor * B / E)), 1)
-    xk = jnp.broadcast_to(x.reshape(B, 1, d), (B, K, d)).reshape(1, B * K, d)
-    picked, keep_flat = _dispatch_experts(
-        params, xk, a, onehot, keep.reshape(1, B * K), c_pack, cfg, constrain
-    )
-    w = (top_w.reshape(1, B * K) * keep_flat).astype(ct)
-    out = jnp.sum(picked.reshape(B, K, d) * w.reshape(B, K, 1), axis=1)
+    if packing == "sequence":
+        # One group per sequence (the full forward's grouping): dispatch
+        # never mixes tokens across the batch, so a contended expert
+        # cannot overflow the pack buffer and drop another sequence's
+        # counter-kept assignment. Distinct top-k experts per token mean
+        # one slot per (sequence, expert) suffices.
+        xk = jnp.broadcast_to(x.reshape(B, 1, d), (B, K, d))
+        picked, keep_flat = _dispatch_experts(
+            params, xk, top_i, onehot_seq, keep, 1, cfg, constrain
+        )
+        w = (top_w * keep_flat).astype(ct)
+        out = jnp.sum(picked * w[..., None], axis=1)
+    elif packing == "global":
+        # legacy: pack all B decode tokens into one global group with a
+        # static batch-derived capacity; cross-sequence overflow drops
+        c_pack = max(int(np.ceil(K * m.capacity_factor * B / E)), 1)
+        a = top_i.reshape(1, B * K)
+        onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)           # (1, B*K, E)
+        xk = jnp.broadcast_to(x.reshape(B, 1, d), (B, K, d)).reshape(1, B * K, d)
+        picked, keep_flat = _dispatch_experts(
+            params, xk, a, onehot, keep.reshape(1, B * K), c_pack, cfg, constrain
+        )
+        w = (top_w.reshape(1, B * K) * keep_flat).astype(ct)
+        out = jnp.sum(picked.reshape(B, K, d) * w.reshape(B, K, 1), axis=1)
+    else:
+        raise ValueError(f"unknown packing {packing!r}")
     return out.reshape(B, 1, d), new_load

@@ -198,6 +198,36 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
     return _tree_map_with_path(fix, zeros)
 
 
+def paged_cache_specs(
+    cfg: ModelConfig, num_pages: int,
+    page_size: int = layers.PAGE_SIZE, int8: bool = False,
+) -> Dict[str, Any]:
+    """Paged KV pool specs, stacked over layers (serving decode engine).
+
+    Only DENSE blocks page their cache; recurrent-state archs (ssm/xlstm)
+    and MOE's load counters keep dense per-lane state — the fallback
+    matrix is documented in docs/kernels.md.
+    """
+    if cfg.block != BlockKind.DENSE:
+        raise NotImplementedError(
+            f"paged KV cache supports DENSE blocks only, got {cfg.block}"
+        )
+    one = layers.make_paged_cache_specs(cfg, num_pages, page_size, int8=int8)
+    return {"blocks": common.stacked(one, cfg.num_layers)}
+
+
+def init_paged_cache(
+    cfg: ModelConfig, num_pages: int,
+    page_size: int = layers.PAGE_SIZE, int8: bool = False,
+) -> Any:
+    specs = paged_cache_specs(cfg, num_pages, page_size, int8=int8)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
 def _tree_map_with_path(fn, tree, path=()):
     if isinstance(tree, dict):
         return {k: _tree_map_with_path(fn, v, path + (k,)) for k, v in tree.items()}
@@ -268,14 +298,26 @@ def _attn_full(params, h, positions, cfg, opts):
     q = layers.rope(q, positions, cfg.rope_theta)
     k = layers.rope(k, positions, cfg.rope_theta)
     q, k, v = layers._constrain_qkv(q, k, v, opts)
-    out = layers.blockwise_attention(
-        q, k, v,
-        causal=True,
-        window=cfg.window if cfg.attention == AttentionKind.SLIDING else 0,
-        q_chunk=opts.q_chunk,
-        kv_chunk=opts.kv_chunk,
-        impl=opts.attn_impl,
-    )
+    window = cfg.window if cfg.attention == AttentionKind.SLIDING else 0
+    if opts.attn_impl == "flash":
+        # Pallas flash-attention prefill (serving hot path). Same math as
+        # the jnp blockwise path (allclose-swept in tests/test_kernels.py);
+        # interpret mode keeps it runnable on CPU CI.
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(
+            q, k, v, True, window, 0, 128, 128,
+            jax.default_backend() != "tpu",
+        )
+    else:
+        out = layers.blockwise_attention(
+            q, k, v,
+            causal=True,
+            window=window,
+            q_chunk=opts.q_chunk,
+            kv_chunk=opts.kv_chunk,
+            impl=opts.attn_impl,
+        )
     B, S = h.shape[:2]
     out = out.reshape(B, S, cfg.q_dim)
     return common.dense(out, params["wo"], cfg.dtype), (k, v)
@@ -587,3 +629,62 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, opts: RunOpts):
 
     logits = _unembed(params, x, cfg)
     return logits, new_cache
+
+
+def decode_step_paged(
+    params, cache, tokens, seq_lens, block_table,
+    cfg: ModelConfig, opts: RunOpts,
+    *, use_kernel: bool = False, interpret: bool = False,
+):
+    """One continuous-batching decode step against the paged KV pool.
+
+    tokens: (B, 1) int32; seq_lens: (B,) int32 per-lane cached-token counts
+    (each lane's write position — lanes advance independently, unlike
+    ``decode_step``'s single scalar ``pos``); block_table: (B, max_blocks)
+    int32 with -1 for unassigned ranges (a fully dead lane produces
+    deterministic garbage logits the engine never samples).
+
+    Returns (logits (B, 1, V), new cache). DENSE blocks only — see
+    ``paged_cache_specs``.
+    """
+    if cfg.block != BlockKind.DENSE:
+        raise NotImplementedError(
+            f"paged decode supports DENSE blocks only, got {cfg.block}"
+        )
+    ct = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ct)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+
+    def body(xx, pc):
+        p, c = pc
+        c = jax.lax.optimization_barrier(c)
+        xx = opts.constrain(xx, "activation")
+        h = layers.norm(p["ln1"], xx, cfg)
+        attn_out, new_c = layers.decode_attention_paged(
+            p["attn"], c, h, seq_lens, block_table, cfg,
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        xx = xx + attn_out
+        h = layers.norm(p["ln2"], xx, cfg)
+        xx = xx + layers.mlp(p["mlp"], h, cfg)
+        return xx, new_c
+
+    if opts.decode_unroll:
+        n = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        new_blocks = cache["blocks"]
+        for i in range(n):
+            p_i = jax.tree_util.tree_map(lambda t: t[i], params["blocks"])
+            c_i = jax.tree_util.tree_map(lambda t: t[i], new_blocks)
+            x, c_new = body(x, (p_i, c_i))
+            new_blocks = jax.tree_util.tree_map(
+                lambda stack, sl: jax.lax.dynamic_update_index_in_dim(
+                    stack, sl.astype(stack.dtype), i, 0
+                ),
+                new_blocks, c_new,
+            )
+    else:
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+
+    logits = _unembed(params, x, cfg)
+    return logits, {"blocks": new_blocks}

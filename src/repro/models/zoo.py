@@ -59,6 +59,29 @@ class Model:
     def init_cache(self, batch: int, seq_len: int):
         return transformer.init_cache(self.cfg, batch, seq_len)
 
+    def decode_step_paged(
+        self, params, cache, tokens, seq_lens, block_table,
+        opts: Optional[RunOpts] = None,
+        *, use_kernel: bool = False, interpret: bool = False,
+    ):
+        return transformer.decode_step_paged(
+            params, cache, tokens, seq_lens, block_table,
+            self.cfg, opts or RunOpts(),
+            use_kernel=use_kernel, interpret=interpret,
+        )
+
+    def paged_cache_specs(self, num_pages: int, page_size: int = 16,
+                          int8: bool = False):
+        return transformer.paged_cache_specs(
+            self.cfg, num_pages, page_size, int8=int8
+        )
+
+    def init_paged_cache(self, num_pages: int, page_size: int = 16,
+                         int8: bool = False):
+        return transformer.init_paged_cache(
+            self.cfg, num_pages, page_size, int8=int8
+        )
+
     def param_count(self) -> int:
         return sum(
             int(np.prod(s.shape))

@@ -12,8 +12,12 @@ from redundancy mechanisms.
 * :mod:`repro.serve.router`  — the deterministic open-loop request queue
   (served/shed tokens, SLO-violation clock, exact token conservation);
 * :mod:`repro.serve.migrate` — the params-only migration cost model and
-  the live reshard helpers ``launch/serve.py --plan`` drives for real.
+  the live reshard helpers ``launch/serve.py --plan`` drives for real;
+* :mod:`repro.serve.engine`  — the continuous-batching decode engine over
+  the paged KV pool (the replica hot path whose measured tokens/sec the
+  fleet simulator consumes in ``throughput_mode="engine"``).
 """
+from repro.serve.engine import Completion, DecodeEngine, Request
 from repro.serve.fleet import (
     FleetPlan,
     FleetReport,
@@ -36,11 +40,14 @@ from repro.serve.router import (
 
 __all__ = [
     "CapacityEvent",
+    "Completion",
+    "DecodeEngine",
     "FleetPlan",
     "FleetReport",
     "FleetSimulator",
     "MigrationCost",
     "Replica",
+    "Request",
     "RouterStats",
     "ServePolicy",
     "ServingWorkload",

@@ -327,6 +327,16 @@ class FleetSimulator:
     spread); a revoked replica is replaced after a FULL serving-state
     restore through remote storage (what running today's serve.py behind
     an autoscaler amounts to).
+
+    ``throughput_mode`` selects where the reference replica rate comes
+    from: ``"analytic"`` (default) uses the workload's closed-form
+    ``replica_tokens_per_sec``; ``"engine"`` replaces it with
+    ``measured_tokens_per_sec`` — the tokens/sec a real
+    :class:`repro.serve.engine.DecodeEngine` measured on the reference
+    shape — so provisioning, N-1 sizing, and the router all consume the
+    engine's observed rate. With a measured rate equal to the analytic
+    reference the two modes produce identical reports (pinned in
+    tests/test_serve_fleet.py), so the analytic baseline stays bit-exact.
     """
 
     def __init__(
@@ -339,8 +349,22 @@ class FleetSimulator:
         *,
         mode: str = "fleet",
         tracker=None,  # Optional[dist.meshplan.ThroughputTracker]
+        throughput_mode: str = "analytic",
+        measured_tokens_per_sec: Optional[float] = None,
     ):
         assert mode in ("fleet", "static")
+        assert throughput_mode in ("analytic", "engine")
+        if throughput_mode == "engine":
+            if not measured_tokens_per_sec or measured_tokens_per_sec <= 0:
+                raise ValueError(
+                    "throughput_mode='engine' needs a positive "
+                    "measured_tokens_per_sec from a DecodeEngine"
+                )
+            workload = dataclasses.replace(
+                workload,
+                replica_tokens_per_sec=float(measured_tokens_per_sec),
+            )
+        self.throughput_mode = throughput_mode
         self.feats = alg.MarketFeatures.from_history(history)
         self.future = future
         self.workload = workload

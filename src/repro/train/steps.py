@@ -237,3 +237,26 @@ def build_decode_step(model: zoo.Model, layout: ShardingLayout, constrain=None):
         return logits, new_cache
 
     return decode_step
+
+
+def build_paged_decode_step(
+    model: zoo.Model, layout: ShardingLayout, constrain=None,
+    *, use_kernel: bool = False, interpret: bool = False,
+):
+    """Continuous-batching decode step against the paged KV pool.
+
+    Signature: (params, cache, tokens (B,1), seq_lens (B,), block_table
+    (B,nb)) -> (logits, cache). The block table and per-lane lengths are
+    small host-side int32 arrays re-fed each step (not donated); the pool
+    itself is donation-friendly like the dense cache.
+    """
+    opts = run_opts_from_layout(layout, constrain)
+
+    def paged_decode_step(params, cache, tokens, seq_lens, block_table):
+        logits, new_cache = model.decode_step_paged(
+            params, cache, tokens, seq_lens, block_table, opts,
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        return logits, new_cache
+
+    return paged_decode_step

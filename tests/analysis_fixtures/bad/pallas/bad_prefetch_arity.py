@@ -1,0 +1,27 @@
+"""P002 through ``grid_spec=``: with ``num_scalar_prefetch=2`` every
+index_map must take grid_rank + 2 parameters — forgetting the prefetch
+refs silently shifts which block each grid step reads."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bt_ref, sl_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def gather(block_table, seq_lens, pool):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(4, 8),
+        in_specs=[
+            pl.BlockSpec((1, 16), lambda b, j, bt: (bt[b, j], 0)),  # P002: 3 != 4
+        ],
+        out_specs=pl.BlockSpec((1, 16), lambda b, j, bt, sl: (b, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((4, 16), jnp.float32),
+    )(block_table, seq_lens, pool)

@@ -1,0 +1,27 @@
+"""P001 through ``grid_spec=``: the page block shape does not tile the
+declared output ref — a paged-attention-style kernel whose block-table
+index maps are otherwise correct (arity = grid rank + prefetch)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bt_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def gather_pages(block_table, pool):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 8),
+        in_specs=[
+            pl.BlockSpec((1, 16), lambda b, j, bt: (bt[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 24), lambda b, j, bt: (b, 0)),  # P001: 24 !| 100
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((4, 100), jnp.float32),
+    )(block_table, pool)

@@ -146,3 +146,85 @@ def test_mlstm_state_carry_composes():
     _, split = mlstm_ref(q[:, :, 32:], k[:, :, 32:], v[:, :, 32:], g[:, :, 32:], state=st)
     for a, b in zip(joint, split):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+from repro.kernels.paged_attention import paged_attention_ref, paged_decode_attention  # noqa: E402
+
+
+def _paged_case(B, H, KVH, hd, page_size, max_blocks, lens, dtype, seed=0):
+    """Random pool + a block table that scatters each sequence's pages
+    non-contiguously (the pool is shared — physical page order must not
+    matter), with unassigned tail entries left at -1."""
+    rng = np.random.RandomState(seed)
+    num_pages = B * max_blocks + 1  # +1: a never-referenced spare page
+    ks = jax.random.split(jax.random.fold_in(KEY, seed + B * hd), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k_pages = jax.random.normal(ks[1], (num_pages, page_size, KVH, hd), dtype)
+    v_pages = jax.random.normal(ks[2], (num_pages, page_size, KVH, hd), dtype)
+    perm = rng.permutation(B * max_blocks)
+    table = np.full((B, max_blocks), -1, np.int32)
+    for b, n in enumerate(lens):
+        used = -(-n // page_size)  # ceil
+        table[b, :used] = perm[b * max_blocks: b * max_blocks + used]
+    return q, k_pages, v_pages, jnp.asarray(table), jnp.asarray(np.asarray(lens, np.int32))
+
+
+PAGED_CASES = [
+    # B, H, KVH, hd, page_size, max_blocks, lens, dtype
+    (2, 4, 4, 64, 16, 4, [64, 33], jnp.float32),
+    (3, 8, 2, 64, 16, 4, [1, 50, 64], jnp.float32),   # GQA 4:1, len-1 lane
+    (2, 4, 1, 32, 8, 6, [41, 17], jnp.float32),       # MQA, ragged pages
+    (2, 4, 2, 64, 16, 4, [64, 7], jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,KVH,hd,ps,mb,lens,dtype", PAGED_CASES)
+def test_paged_attention_kernel_matches_ref(B, H, KVH, hd, ps, mb, lens, dtype):
+    q, kp, vp, table, sl = _paged_case(B, H, KVH, hd, ps, mb, lens, dtype)
+    out = paged_decode_attention(q, kp, vp, table, sl, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, table, sl)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+    )
+
+
+def test_paged_attention_ref_matches_dense_sdpa():
+    """The paged oracle itself against plain masked attention on the
+    gathered, densified cache — the ref is only a layout change."""
+    B, H, KVH, hd, ps, mb = 2, 4, 2, 64, 16, 4
+    lens = [37, 64]
+    q, kp, vp, table, sl = _paged_case(B, H, KVH, hd, ps, mb, lens, jnp.float32)
+    out = paged_attention_ref(q, kp, vp, table, sl)
+
+    G = H // KVH
+    k = jnp.take(kp, jnp.maximum(table, 0), axis=0).reshape(B, mb * ps, KVH, hd)
+    v = jnp.take(vp, jnp.maximum(table, 0), axis=0).reshape(B, mb * ps, KVH, hd)
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k) / np.sqrt(hd)
+    mask = jnp.arange(mb * ps)[None, None, None, :] < sl[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    ref = jnp.einsum("bkgt,btkd->bkgd", jax.nn.softmax(s, axis=-1), v)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.reshape(B, H, hd)), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_paged_attention_dead_lane_is_zero_and_isolated():
+    """seq_len 0 lanes finalize to exactly zero and never perturb live
+    lanes — the engine parks evicted lanes on the trash page and relies on
+    this."""
+    B, H, KVH, hd, ps, mb = 3, 4, 2, 32, 16, 3
+    q, kp, vp, table, sl = _paged_case(B, H, KVH, hd, ps, mb, [40, 17, 25], jnp.float32)
+    dead_sl = sl.at[1].set(0)
+    out = paged_decode_attention(q, kp, vp, table, dead_sl, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, table, dead_sl)
+    assert np.all(np.asarray(out[1]) == 0.0)
+    assert np.all(np.asarray(ref[1]) == 0.0)
+    # live lanes unchanged vs the all-live run
+    full = paged_decode_attention(q, kp, vp, table, sl, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(full[0]), atol=0, rtol=0)
+    np.testing.assert_allclose(np.asarray(out[2]), np.asarray(full[2]), atol=0, rtol=0)

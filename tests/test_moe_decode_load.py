@@ -1,16 +1,15 @@
-"""Regression pin: batched MoE decode's residual CROSS-SEQUENCE
-buffer-overflow drop under mixed-length sequences.
+"""Batched MoE decode under expert contention: per-sequence packing groups
+(the default) serve every counter-kept sequence; the legacy global group's
+cross-sequence buffer-overflow drop stays pinned as a regression baseline.
 
 ``moe_decode_block`` replays the teacher-forced keep/drop decision from
-the per-sequence ``moe_load`` counters (forward-consistent capacity), but
-still packs all B decode tokens into ONE global scatter group with a
-static capacity ``c_pack = ceil(K·cf·B/E)`` per expert. When more than
-``c_pack`` counter-KEPT sequences route to the same expert in one step,
-the overflow is dropped — a deviation from the per-sequence forward that
-per-sequence packing groups would remove (ROADMAP open item). These tests
-pin today's exact behavior so the future packing fix has a baseline to
-beat: the counter semantics it must preserve, and the cross-sequence drop
-it must remove.
+the per-sequence ``moe_load`` counters (forward-consistent capacity). With
+``packing="sequence"`` the scatter groups mirror the full forward's
+per-sequence grouping, so a contended expert cannot overflow a shared
+buffer and drop another sequence's kept assignment — a batched decode step
+is bit-identical to decoding each sequence alone. ``packing="global"``
+keeps the old single-group path (static ``c_pack = ceil(K·cf·B/E)``
+capacity over the batch) whose cross-sequence drop these tests pin.
 """
 import dataclasses
 
@@ -39,35 +38,38 @@ def tiny_moe():
     return cfg, params
 
 
-def _decode(cfg, params, x, load, pos):
+def _decode(cfg, params, x, load, pos, packing="sequence"):
     out, new_load = moe.moe_decode_block(
-        params, x, jnp.asarray(load, jnp.int32), jnp.int32(pos), cfg
+        params, x, jnp.asarray(load, jnp.int32), jnp.int32(pos), cfg,
+        packing=packing,
     )
     return np.asarray(out, np.float32), np.asarray(new_load)
 
 
-def test_counters_count_kept_and_dropped(tiny_moe):
+@pytest.mark.parametrize("packing", ["sequence", "global"])
+def test_counters_count_kept_and_dropped(tiny_moe, packing):
     """``moe_load`` carries the forward's cumsum arrival positions: EVERY
-    assignment increments it, buffer-dropped ones included."""
+    assignment increments it, buffer-dropped ones included — identically
+    in both packing modes."""
     cfg, params = tiny_moe
     E = cfg.moe.num_experts
     B = 4
     x = jnp.ones((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
-    _, new_load = _decode(cfg, params, x, np.zeros((B, E)), pos=8)
-    # all B sequences routed expert 0 once — counted even though c_pack =
-    # ceil(1·1.0·4/E) = 1 kept only one of them in the buffer
+    _, new_load = _decode(cfg, params, x, np.zeros((B, E)), pos=8,
+                          packing=packing)
+    # all B sequences routed expert 0 once — counted even when the global
+    # pack's c_pack = ceil(1·1.0·4/E) = 1 kept only one in the buffer
     np.testing.assert_array_equal(new_load[:, 0], np.ones(B))
     np.testing.assert_array_equal(new_load[:, 1:], np.zeros((B, E - 1)))
 
 
-def test_cross_sequence_overflow_drop_pinned(tiny_moe):
-    """THE residual deviation, pinned: under contention the first sequence
-    (scatter order) matches its single-sequence decode bit-for-bit, the
-    overflow sequences are dropped to the residual (zero block output)
-    even though their single-sequence decode is nonzero."""
+def test_contended_batch_serves_every_sequence(tiny_moe):
+    """Default per-sequence packing: all B sequences route to the same
+    expert in one step and EVERY one is served, each bit-identical to its
+    single-sequence decode."""
     cfg, params = tiny_moe
-    E = cfg.moe.num_experts  # reduced() caps at 4
-    B = 4  # c_pack = ceil(1 * 1.0 * 4 / 4) = 1 slot for expert 0
+    E = cfg.moe.num_experts
+    B = 4
     key = jax.random.key(1)
     x = jax.random.normal(key, (B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
     x = jnp.abs(x)  # keep router logit for expert 0 positive/dominant
@@ -81,6 +83,33 @@ def test_cross_sequence_overflow_drop_pinned(tiny_moe):
         ],
         axis=0,
     )
+    assert np.abs(singles).max(axis=(1, 2)).min() > 0
+    np.testing.assert_array_equal(batched, singles)
+
+
+def test_global_packing_overflow_drop_pinned(tiny_moe):
+    """Legacy global group, pinned: under contention the first sequence
+    (scatter order) matches its single-sequence decode bit-for-bit, the
+    overflow sequences are dropped to the residual (zero block output)
+    even though their single-sequence decode is nonzero."""
+    cfg, params = tiny_moe
+    E = cfg.moe.num_experts  # reduced() caps at 4
+    B = 4  # c_pack = ceil(1 * 1.0 * 4 / 4) = 1 slot for expert 0
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    x = jnp.abs(x)
+    pos = 8
+
+    batched, _ = _decode(cfg, params, x, np.zeros((B, E)), pos,
+                         packing="global")
+    singles = np.concatenate(
+        [
+            _decode(cfg, params, x[b : b + 1], np.zeros((1, E)), pos,
+                    packing="global")[0]
+            for b in range(B)
+        ],
+        axis=0,
+    )
     # every sequence alone is served by the expert (nonzero output)
     assert np.abs(singles).max(axis=(1, 2)).min() > 0
     # batched: exactly one buffer slot -> sequence 0 is bit-identical to
@@ -89,12 +118,11 @@ def test_cross_sequence_overflow_drop_pinned(tiny_moe):
     np.testing.assert_array_equal(batched[1:], np.zeros_like(batched[1:]))
 
 
-def test_mixed_length_counter_drop_is_forward_consistent(tiny_moe):
-    """Mixed-length batch: a LONG sequence whose counters already reached
-    the forward's capacity is counter-dropped (correct, forward-consistent)
-    and consumes NO buffer slot — so a short sequence behind it in scatter
-    order is served. Pins that the two drop mechanisms compose: counters
-    first (exact), packing second (the residual deviation)."""
+def test_mixed_length_contended_long_sequence_is_served(tiny_moe):
+    """Mixed-length batch under the default packing: a long sequence whose
+    counters reached the forward's capacity is counter-dropped (correct,
+    forward-consistent), and EVERY short sequence is served bit-identically
+    to its solo decode — including the ones the legacy global pack dropped."""
     cfg, params = tiny_moe
     E = cfg.moe.num_experts
     B = 4
@@ -111,16 +139,41 @@ def test_mixed_length_counter_drop_is_forward_consistent(tiny_moe):
         _decode(cfg, params, x[b : b + 1], load[b : b + 1], pos)[0]
         for b in range(B)
     ]
-    # the long sequence: counter-dropped in batch AND solo — bit-identical
-    # zero both ways (this is the forward-consistent path, not a bug)
+    # the long sequence: counter-dropped both ways (forward-consistent)
     np.testing.assert_array_equal(batched[0], np.zeros_like(batched[0]))
     np.testing.assert_array_equal(singles[0][0], np.zeros_like(singles[0][0]))
-    # it consumed no slot: the FIRST short sequence is served exactly
+    # every short sequence is served exactly — no cross-sequence drop
+    for b in (1, 2, 3):
+        assert np.abs(singles[b]).max() > 0
+        np.testing.assert_array_equal(batched[b], singles[b][0])
+    # counters advanced for every sequence regardless of drops
+    np.testing.assert_array_equal(new_load[:, 0], load[:, 0] + 1)
+
+
+def test_mixed_length_global_packing_drop_pinned(tiny_moe):
+    """Legacy global group on the mixed-length batch: the counter-dropped
+    long sequence consumes no slot, the first short sequence is served,
+    the remaining shorts overflow the single slot — the pinned
+    cross-sequence deviation the default packing removes."""
+    cfg, params = tiny_moe
+    E = cfg.moe.num_experts
+    B = 4
+    key = jax.random.key(2)
+    x = jnp.abs(jax.random.normal(key, (B, 1, cfg.d_model), jnp.dtype(cfg.dtype)))
+    pos = 8
+    load = np.zeros((B, E))
+    load[0, 0] = 2
+    batched, new_load = _decode(cfg, params, x, load, pos, packing="global")
+    singles = [
+        _decode(cfg, params, x[b : b + 1], load[b : b + 1], pos,
+                packing="global")[0]
+        for b in range(B)
+    ]
+    np.testing.assert_array_equal(batched[0], np.zeros_like(batched[0]))
+    # the long sequence consumed no slot: the FIRST short is served exactly
     np.testing.assert_array_equal(batched[1], singles[1][0])
-    # the remaining short sequences overflow the single slot: dropped in
-    # the batch, served solo — the pinned cross-sequence deviation
+    # the remaining shorts overflow the single slot: dropped in the batch
     np.testing.assert_array_equal(batched[2:], np.zeros_like(batched[2:]))
     for b in (2, 3):
         assert np.abs(singles[b]).max() > 0
-    # counters advanced for every sequence regardless of drops
     np.testing.assert_array_equal(new_load[:, 0], load[:, 0] + 1)

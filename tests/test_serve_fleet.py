@@ -350,3 +350,59 @@ def test_replica_rate_scales_with_shape_throughput():
     r8 = replica_rate(wl, feats, Allocation.single(eight[0], 8))
     assert r1 == pytest.approx(wl.replica_tokens_per_sec)
     assert r1 < r8 < 8 * r1
+
+
+# --- throughput_mode: analytic closed form vs engine-measured rate ----------
+
+def test_fleet_engine_mode_pinned_to_analytic_at_reference_rate():
+    """throughput_mode="engine" with a measured rate equal to the analytic
+    reference is bit-identical to the default analytic mode — the engine
+    wiring adds no drift to the pinned baseline scenarios."""
+    hist, fut = _hand_markets()
+    wl = _hand_workload()
+    policy = ServePolicy(slo_horizon_hours=12.0, capacity_headroom=1.4)
+    rate = np.full(48, 400.0)
+    rate[0] = 0.0
+    analytic = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+    engine = FleetSimulator(
+        hist, fut, wl, policy,
+        throughput_mode="engine",
+        measured_tokens_per_sec=wl.replica_tokens_per_sec,
+    ).run(48.0, rate)
+    assert engine.cost_dollars == analytic.cost_dollars
+    assert engine.router.served_tokens == analytic.router.served_tokens
+    assert engine.slo_violation_seconds == analytic.slo_violation_seconds
+    assert engine.breakdown.leg_cost == analytic.breakdown.leg_cost
+    assert engine.markets_used == analytic.markets_used
+
+
+def test_fleet_engine_mode_slower_measured_rate_provisions_more():
+    """A measured decode rate below the closed form means each replica
+    delivers fewer tokens/sec, so the engine-mode fleet must provision at
+    least as much capacity (and never serve more than analytic claims)."""
+    hist, fut = _hand_markets()
+    wl = _hand_workload()
+    policy = ServePolicy(slo_horizon_hours=12.0, capacity_headroom=1.4)
+    rate = np.full(48, 400.0)
+    rate[0] = 0.0
+    analytic = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+    slow = FleetSimulator(
+        hist, fut, wl, policy,
+        throughput_mode="engine",
+        measured_tokens_per_sec=wl.replica_tokens_per_sec / 2.0,
+    ).run(48.0, rate)
+    assert len(slow.markets_used) >= len(analytic.markets_used)
+    assert slow.cost_dollars > analytic.cost_dollars
+
+
+def test_fleet_engine_mode_requires_measured_rate():
+    hist, fut = _hand_markets()
+    wl = _hand_workload()
+    policy = ServePolicy(slo_horizon_hours=12.0)
+    with pytest.raises(ValueError):
+        FleetSimulator(hist, fut, wl, policy, throughput_mode="engine")
+    with pytest.raises(ValueError):
+        FleetSimulator(
+            hist, fut, wl, policy,
+            throughput_mode="engine", measured_tokens_per_sec=0.0,
+        )

@@ -141,3 +141,38 @@ def test_serve_plan_migration_subprocess():
 def test_serve_plan_single_replica_bit_exact_equivalence():
     res = _run(EQUIV_SCRIPT)
     assert "PLAN_EQUIV_OK" in res.stdout, res.stdout + res.stderr
+
+
+ENGINE_SCRIPT = (
+    'import os\nos.environ["XLA_FLAGS"] = '
+    '"--xla_force_host_platform_device_count=8"\n'
+    + COMMON
+    + textwrap.dedent(
+        """
+        ref = plan_json(run(base + ["--plan", "8", "--engine"]))
+        rt = plan_json(run(base + ["--plan", "8,4", "--revoke-after", "3",
+                                   "--engine"]))
+
+        assert ref["engine"] is True and rt["engine"] is True
+
+        # the continuous-batching engine re-prefills prompt + committed
+        # tokens after the shed, so the WHOLE stream — not just the
+        # pre-revocation prefix — is bit-identical to the uninterrupted
+        # run, even across the 4x2 -> 2x2 mesh change
+        assert rt["tokens"] == ref["tokens"], (rt["tokens"], ref["tokens"])
+        assert rt["migrated_at"] == 3, rt
+        assert 0 < rt["params_bytes"] < rt["train_path_bytes"], rt
+        assert rt["cache_bytes"] == 0  # pages die with the instance
+        # real decode timings measured on both mesh shapes
+        assert set(rt["measured_steps_per_sec"]) == {"4x2", "2x2"}, rt
+        assert all(v > 0 for v in rt["measured_steps_per_sec"].values())
+        assert rt["engine_tokens_per_sec"] > 0
+        print("PLAN_ENGINE_OK", rt["engine_tokens_per_sec"])
+        """
+    )
+)
+
+
+def test_serve_plan_engine_round_trip_token_identical():
+    res = _run(ENGINE_SCRIPT)
+    assert "PLAN_ENGINE_OK" in res.stdout, res.stdout + res.stderr

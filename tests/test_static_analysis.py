@@ -127,6 +127,8 @@ def test_pallas_bad_fixtures_fire_exactly_their_rule():
     cases = {
         "bad_divisibility.py": ("P001", 1),
         "bad_arity.py": ("P002", 1),
+        "bad_table_divisibility.py": ("P001", 1),   # via grid_spec=
+        "bad_prefetch_arity.py": ("P002", 1),       # grid rank + prefetch
         "side_effect.py": ("P003", 3),
     }
     for name, (rule, count) in cases.items():

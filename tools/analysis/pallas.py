@@ -10,7 +10,12 @@ pins the contracts at the source:
   literals; symbolic dims are skipped — the runtime asserts cover those).
 * **P002** — an ``index_map`` whose arity differs from the grid rank:
   every grid axis indexes every BlockSpec map, so a missing lambda
-  parameter silently reuses the wrong block.
+  parameter silently reuses the wrong block. Kernels built through a
+  ``grid_spec=`` kwarg (``GridSpec`` / ``pltpu.PrefetchScalarGridSpec``)
+  are parsed too: with scalar prefetch the maps take
+  ``grid_rank + num_scalar_prefetch`` parameters, because every
+  prefetched operand (e.g. a paged-attention block table) is appended to
+  the index-map signature after the grid axes.
 * **P003** — Python side effects in a kernel body: ``print``, mutation
   of closure state (``.append``/``.extend``/``.update`` on names defined
   outside the kernel), ``global``/``nonlocal``, or ``.at[...]`` on a
@@ -148,31 +153,56 @@ class PallasPass(Pass):
         diags: List[Diagnostic] = []
         kw = {k.arg: k.value for k in call.keywords if k.arg}
 
-        grid = self._resolve(kw.get("grid"), scope)
+        grid_node = kw.get("grid")
+        in_specs_node = kw.get("in_specs")
+        out_specs_node = kw.get("out_specs")
+        n_prefetch = 0
+        gs = self._resolve(kw.get("grid_spec"), scope)
+        if isinstance(gs, ast.Call) and _attr_tail(gs.func) in (
+            "GridSpec", "PrefetchScalarGridSpec"
+        ):
+            gkw = {k.arg: k.value for k in gs.keywords if k.arg}
+            grid_node = gkw.get("grid", grid_node)
+            in_specs_node = gkw.get("in_specs", in_specs_node)
+            out_specs_node = gkw.get("out_specs", out_specs_node)
+            npre = self._resolve(gkw.get("num_scalar_prefetch"), scope)
+            if isinstance(npre, ast.Constant) and isinstance(npre.value, int):
+                n_prefetch = npre.value
+
+        grid = self._resolve(grid_node, scope)
         grid_rank: Optional[int] = None
         if isinstance(grid, ast.Tuple):
             grid_rank = len(grid.elts)
         elif isinstance(grid, ast.Constant) and isinstance(grid.value, int):
             grid_rank = 1
 
-        in_specs = _as_list(self._resolve(kw.get("in_specs"), scope))
-        out_specs = _as_list(self._resolve(kw.get("out_specs"), scope))
+        in_specs = _as_list(self._resolve(in_specs_node, scope))
+        out_specs = _as_list(self._resolve(out_specs_node, scope))
         out_shapes = _as_list(self._resolve(kw.get("out_shape"), scope))
 
-        # P002: every BlockSpec index_map must take one arg per grid axis
+        # P002: every BlockSpec index_map takes one arg per grid axis, plus
+        # one per scalar-prefetched operand when a PrefetchScalarGridSpec is
+        # in play (the prefetch refs ride after the grid indices)
         if grid_rank is not None:
+            want = grid_rank + n_prefetch
             for spec in in_specs + out_specs:
                 spec = self._resolve(spec, scope)
                 lam = self._blockspec_index_map(spec, scope)
                 if lam is not None:
                     arity = len(lam.args.args)
-                    if arity != grid_rank:
+                    if arity != want:
+                        detail = (
+                            f"grid rank {grid_rank} + {n_prefetch} scalar-"
+                            f"prefetch operand(s)"
+                            if n_prefetch
+                            else f"the grid has rank {grid_rank}"
+                        )
                         diags.append(
                             self.diag(
                                 f, lam, "P002",
-                                f"index_map takes {arity} args but the grid "
-                                f"has rank {grid_rank}",
-                                "one index_map parameter per grid axis",
+                                f"index_map takes {arity} args but {detail}",
+                                "one index_map parameter per grid axis, then "
+                                "one per prefetched ref",
                             )
                         )
 

@@ -50,6 +50,14 @@ SERVE_POLICY_KEYS = {
     "billing_buffer_usd",
 }
 SERVE_POLICIES = {"fleet", "on_demand", "static"}
+KERNEL_BENCH_KEYS = {
+    "prompt_len", "max_context", "decode_steps", "page_size", "backend",
+    "batches",
+}
+KERNEL_ROW_KEYS = {
+    "batch", "prefill_tokens_per_sec", "decode_dense_tokens_per_sec",
+    "decode_paged_tokens_per_sec",
+}
 
 
 def _require(errors, cond, msg):
@@ -109,6 +117,46 @@ def check_serve(errors, name, data):
             missing = SERVE_POLICY_KEYS - set(rep)
             _require(errors, not missing,
                      f"{name}: scenario {sid}.{p} missing {sorted(missing)}")
+    check_kernel_bench(errors, name, data)
+
+
+def check_kernel_bench(errors, name, data):
+    """The committed serve bench must carry the hot-path microbench, and
+    its numbers must still satisfy the acceptance inequality the bench
+    asserted at measurement time: the paged KV pool beats decoding against
+    the dense max-context cache at serving batch sizes (batch ≥ 4)."""
+    kb = data.get("kernel_bench")
+    _require(errors, isinstance(kb, dict),
+             f"{name}: missing kernel_bench (run serve_bench.py --kernels)")
+    if not isinstance(kb, dict):
+        return
+    missing = KERNEL_BENCH_KEYS - set(kb)
+    _require(errors, not missing, f"{name}: kernel_bench missing {sorted(missing)}")
+    rows = kb.get("batches", [])
+    _require(errors, isinstance(rows, list) and rows,
+             f"{name}: kernel_bench.batches must be a non-empty list")
+    batches = set()
+    for row in rows if isinstance(rows, list) else []:
+        if not isinstance(row, dict):
+            errors.append(f"{name}: kernel_bench batch row must be an object")
+            continue
+        missing = KERNEL_ROW_KEYS - set(row)
+        _require(errors, not missing,
+                 f"{name}: kernel_bench batch row missing {sorted(missing)}")
+        if missing:
+            continue
+        batches.add(row["batch"])
+        if row["batch"] >= 4:
+            _require(
+                errors,
+                row["decode_paged_tokens_per_sec"]
+                >= row["decode_dense_tokens_per_sec"],
+                f"{name}: kernel_bench batch {row['batch']}: paged decode "
+                f"({row['decode_paged_tokens_per_sec']} tok/s) slower than "
+                f"dense ({row['decode_dense_tokens_per_sec']} tok/s)",
+            )
+    _require(errors, 4 in batches,
+             f"{name}: kernel_bench must include a batch-4 row, got {sorted(batches)}")
 
 
 def check_breakdowns(errors, name, data, path="", depth=0):

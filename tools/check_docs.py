@@ -22,6 +22,7 @@ REQUIRED = [
     "docs/accounting.md",
     "docs/serving.md",
     "docs/invariants.md",
+    "docs/kernels.md",
 ]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
