@@ -13,12 +13,19 @@ diurnal swing) over the same future price window:
   revoked; the availability bar at sticker price;
 * **static** — spot with no market intelligence: over-replicated capacity
   (×1.5) on the cheapest suitable markets; a revocation pulls the FULL
-  serving state (params + cache) back through remote storage.
+  serving state (params + cache) back through remote storage;
+* **autoscale** — the fleet policy with demand-driven sizing
+  (``FleetSimulator(sizing="auto")``): forecast-ahead scale-up,
+  low-water scale-down under a cooldown, demand-driven repair. The
+  peak-sized fleet's night-time headroom is the money on the table.
 
 Asserted, not narrated (the run aborts on violation):
 
 * fleet SLO-violation seconds ≤ on-demand's, at < its cost (both
   scenarios),
+* on the diurnal trace the autoscaled fleet is STRICTLY cheaper than the
+  static-peak fleet at 0 SLO-violation seconds (and sheds idle
+  headroom); on every scenario it meets the fleet's violation bar,
 * every fleet migration moves strictly fewer bytes than the same
   revocation's full restore — and strictly fewer than the TRAINING
   path's restore (opt state never moves for serving).
@@ -50,7 +57,8 @@ BENCH_JSON = REPO_ROOT / "BENCH_serve.json"
 
 CSV_HEADER = (
     "scenario,policy,cost_usd,slo_violation_s,served_mtok,shed_tokens,"
-    "queued_tok_h,revocations,repairs,migrated_bytes,restored_bytes,replicas"
+    "queued_tok_h,revocations,repairs,migrated_bytes,restored_bytes,replicas,"
+    "p50_delay_s,p99_delay_s,scale_ups,scale_downs,idle_headroom_mtok"
 )
 
 
@@ -228,6 +236,9 @@ def run_policies(hist, fut, wl, hours, rate):
     static_policy = ServePolicy(slo_horizon_hours=24.0, capacity_headroom=1.5)
     return {
         "fleet": FleetSimulator(hist, fut, wl, fleet_policy).run(hours, rate),
+        "autoscale": FleetSimulator(
+            hist, fut, wl, fleet_policy, sizing="auto"
+        ).run(hours, rate),
         "on_demand": on_demand_reference(wl, feats, fut, hours, rate, fleet_policy),
         "static": FleetSimulator(hist, fut, wl, static_policy, mode="static").run(
             hours, rate
@@ -244,7 +255,10 @@ def report_row(scenario, policy, rep):
         f"{rep.router.served_tokens / TOKENS_PER_MEGATOKEN:.3f},{rep.router.shed_tokens:.1f},"
         f"{rep.router.queued_token_seconds / SECONDS_PER_HOUR:.1f},"
         f"{rep.revocations},{rep.repairs},"
-        f"{rep.migrated_bytes},{rep.restored_bytes},{rep.replicas_provisioned}"
+        f"{rep.migrated_bytes},{rep.restored_bytes},{rep.replicas_provisioned},"
+        f"{rep.p50_delay_seconds:.3f},{rep.p99_delay_seconds:.3f},"
+        f"{rep.scale_ups},{rep.scale_downs},"
+        f"{rep.idle_headroom_tokens / TOKENS_PER_MEGATOKEN:.3f}"
     )
 
 
@@ -255,11 +269,16 @@ def rep_json(rep):
         "served_tokens": round(rep.router.served_tokens, 1),
         "shed_tokens": round(rep.router.shed_tokens, 1),
         "queued_token_seconds": round(rep.router.queued_token_seconds, 1),
+        "p50_delay_seconds": round(rep.p50_delay_seconds, 4),
+        "p99_delay_seconds": round(rep.p99_delay_seconds, 4),
         "revocations": rep.revocations,
         "repairs": rep.repairs,
         "migrated_bytes": rep.migrated_bytes,
         "restored_bytes": rep.restored_bytes,
         "replicas_provisioned": rep.replicas_provisioned,
+        "scale_ups": rep.scale_ups,
+        "scale_downs": rep.scale_downs,
+        "idle_headroom_tokens": round(rep.idle_headroom_tokens, 1),
         "capacity_tokens_per_sec": round(rep.capacity_tokens_per_sec, 3),
         "billing_buffer_usd": round(rep.breakdown.cost["billing_buffer"], 6),
     }
@@ -283,11 +302,24 @@ def main(quick: bool = False, kernels: bool = False) -> None:
             print(report_row(name, policy, rep))
 
         fleet, od, static = reps["fleet"], reps["on_demand"], reps["static"]
+        auto = reps["autoscale"]
         # --- the acceptance inequalities, enforced -----------------------
         assert fleet.slo_violation_seconds <= od.slo_violation_seconds, (
             name, fleet.slo_violation_seconds, od.slo_violation_seconds)
         assert fleet.cost_dollars < od.cost_dollars, (
             name, fleet.cost_dollars, od.cost_dollars)
+        # the autoscaler may never buy its savings with SLO violations
+        assert auto.slo_violation_seconds <= fleet.slo_violation_seconds, (
+            name, auto.slo_violation_seconds, fleet.slo_violation_seconds)
+        if name == "diurnal":
+            # the tentpole inequality: tracking the diurnal trace beats
+            # peak-sizing strictly, at ZERO violation seconds
+            assert auto.slo_violation_seconds == 0.0, auto.slo_violation_seconds
+            assert auto.cost_dollars < fleet.cost_dollars, (
+                auto.cost_dollars, fleet.cost_dollars)
+            assert auto.idle_headroom_tokens < fleet.idle_headroom_tokens, (
+                auto.idle_headroom_tokens, fleet.idle_headroom_tokens)
+            assert auto.scale_downs > 0, "diurnal trace must trigger downs"
         per_restore = wl.param_bytes + wl.cache_bytes  # full serving state
         if fleet.repairs:
             per_migration = fleet.migrated_bytes / fleet.repairs
@@ -303,6 +335,9 @@ def main(quick: bool = False, kernels: bool = False) -> None:
             f"# {name}: fleet ${fleet.cost_dollars:.2f} @ "
             f"{fleet.slo_violation_seconds:.0f}s viol vs on-demand "
             f"${od.cost_dollars:.2f} @ {od.slo_violation_seconds:.0f}s; "
+            f"autoscale ${auto.cost_dollars:.2f} "
+            f"({auto.scale_ups}↑/{auto.scale_downs}↓, p99 "
+            f"{auto.p99_delay_seconds:.1f}s); "
             f"static ${static.cost_dollars:.2f} restored "
             f"{static.restored_bytes} B"
         )

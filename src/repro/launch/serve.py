@@ -96,6 +96,7 @@ def engine_plan_main(args) -> None:
     from repro.dist import ElasticMeshManager, reshard_tree
     from repro.dist.meshplan import ThroughputTracker
     from repro.models.layers import PAGE_SIZE
+    from repro.serve.autoscale import drain_replica
     from repro.serve.engine import DecodeEngine, Request
     from repro.serve.migrate import (
         assert_params_only,
@@ -137,7 +138,9 @@ def engine_plan_main(args) -> None:
     i = 0
     while engine.in_flight:
         if revoke_after and i == revoke_after:
-            resumed = engine.shed()
+            # the revocation is the same move a scale-down makes: drain
+            # the dying engine's streams onto the replacement replica
+            dying = engine
             plan = man.plan_for(counts[1])
             engine = DecodeEngine(
                 model, layout, plan.mesh, lanes=B, num_pages=num_pages,
@@ -148,10 +151,9 @@ def engine_plan_main(args) -> None:
             migrated["params_bytes"] = moved
             migrated["train_path_bytes"] = assert_params_only(moved, model)
             migrated["migrated_at"] = i
-            for req in resumed:
-                engine.submit(req)
+            n_drained = drain_replica(dying, engine)
             print(
-                f"revoked after step {i}: shed {len(resumed)} streams, "
+                f"revoked after step {i}: shed {n_drained} streams, "
                 f"resumed on {plan.device_count} devices, mesh "
                 f"{plan.mesh_shape}; params-only {migrated['params_bytes']} B "
                 f"< train path {migrated['train_path_bytes']} B"

@@ -15,8 +15,17 @@ from redundancy mechanisms.
   the live reshard helpers ``launch/serve.py --plan`` drives for real;
 * :mod:`repro.serve.engine`  — the continuous-batching decode engine over
   the paged KV pool (the replica hot path whose measured tokens/sec the
-  fleet simulator consumes in ``throughput_mode="engine"``).
+  fleet simulator consumes in ``throughput_mode="engine"``);
+* :mod:`repro.serve.autoscale` — the demand-driven scaler
+  (forecast-ahead scale-up, low-water scale-down with cooldown) behind
+  ``FleetSimulator(sizing="auto")`` and the engine drain helper.
 """
+from repro.serve.autoscale import (
+    AutoscalePolicy,
+    AutoScaler,
+    ScaleDecision,
+    drain_replica,
+)
 from repro.serve.engine import Completion, DecodeEngine, Request
 from repro.serve.fleet import (
     FleetPlan,
@@ -35,10 +44,13 @@ from repro.serve.router import (
     CapacityEvent,
     RouterStats,
     drain_interval,
+    idle_headroom_tokens,
     route_trace,
 )
 
 __all__ = [
+    "AutoScaler",
+    "AutoscalePolicy",
     "CapacityEvent",
     "Completion",
     "DecodeEngine",
@@ -49,9 +61,12 @@ __all__ = [
     "Replica",
     "Request",
     "RouterStats",
+    "ScaleDecision",
     "ServePolicy",
     "ServingWorkload",
     "drain_interval",
+    "drain_replica",
+    "idle_headroom_tokens",
     "migration_cost",
     "on_demand_reference",
     "provision_fleet",

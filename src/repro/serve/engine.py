@@ -173,6 +173,16 @@ class DecodeEngine:
         return list(self._done)
 
     @property
+    def occupancy(self) -> float:
+        """Fraction of decode lanes currently holding a live stream — the
+        utilization signal the demand-driven autoscaler's low-water mark
+        reads (pending-but-unadmitted requests do not count: they hold no
+        lane, so they are demand pressure, not occupancy)."""
+        if not self._lanes:
+            return 0.0
+        return sum(l is not None for l in self._lanes) / len(self._lanes)
+
+    @property
     def measured_tokens_per_sec(self) -> float:
         if self.decode_seconds <= 0:
             return 0.0

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -47,8 +47,17 @@ from repro.core.allocation import Allocation
 from repro.core.market import MarketSet, shape_throughput
 from repro.core.policies import Job, OverheadModel, SiwoftPolicy
 from repro.core.units import SECONDS_PER_HOUR
+from repro.serve.autoscale import AutoscalePolicy, AutoScaler
 from repro.serve.migrate import CACHE_POLICIES, MigrationCost, migration_cost
-from repro.serve.router import CapacityEvent, RouterStats, route_trace
+from repro.serve.router import (
+    CapacityEvent,
+    RouterStats,
+    idle_headroom_tokens,
+    route_trace,
+)
+
+#: measured-throughput correction hook: allocation → multiplicative factor
+RateCorrection = Callable[[Allocation], float]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +160,7 @@ def _admitted(
     feats: alg.MarketFeatures,
     policy: ServePolicy,
     exclude: Set[int],
+    rate_correction: Optional[RateCorrection] = None,
 ) -> List[Allocation]:
     """Suitable allocations whose MTTR dominates the rolling SLO horizon,
     cheapest-per-delivered-token first.
@@ -167,10 +177,12 @@ def _admitted(
     floor = policy.lifetime_factor * policy.slo_horizon_hours
     admitted = [a for a in cands if alg.allocation_mttr(a, feats) >= floor]
     pool = admitted if admitted else cands  # Alg.-1 fallback discipline
+    corr = rate_correction if rate_correction is not None else (lambda a: 1.0)
     return sorted(
         pool,
         key=lambda a: (
-            alg.allocation_price(a, feats) / max(replica_rate(workload, feats, a), 1e-9),
+            alg.allocation_price(a, feats)
+            / max(replica_rate(workload, feats, a, corr(a)), 1e-9),
             a.markets,
         ),
     )
@@ -199,6 +211,8 @@ def provision_fleet(
     policy: ServePolicy,
     *,
     exclude: Set[int] = frozenset(),
+    existing: Sequence[Replica] = (),
+    rate_correction: Optional[RateCorrection] = None,
 ) -> FleetPlan:
     """Size and place the fleet: admitted allocations, cheapest per
     delivered token first, each low-correlated with everything already
@@ -210,43 +224,62 @@ def provision_fleet(
     migrates in. If the diversity filter starves the pool before the
     target is met, it is relaxed (same refill discipline as Alg. 1 step
     13) and the plan is flagged ``relaxed_correlation`` — capacity beats
-    purity, but the operator can see the compromise."""
+    purity, but the operator can see the compromise.
+
+    ``existing`` is the autoscaler's incremental form: replicas the fleet
+    already holds count toward both sizing bars, the diversity filter,
+    and ``max_replicas``, and the returned plan contains only the NEW
+    replicas (empty when the existing fleet already satisfies the bars).
+    ``rate_correction`` (allocation → factor) applies a measured
+    ``ThroughputTracker`` correction to every candidate's rate, so
+    ranking and sizing consume real decode speed instead of the analytic
+    ``n^α`` when a tracker is wired in."""
     target = workload.target_tokens_per_sec * policy.capacity_headroom
+    corr = rate_correction if rate_correction is not None else (lambda a: 1.0)
 
     def satisfied(reps: Sequence[Replica]) -> bool:
-        cap = sum(r.tokens_per_sec for r in reps)
+        rates = [r.tokens_per_sec for r in existing] + [
+            r.tokens_per_sec for r in reps
+        ]
+        cap = sum(rates)
         if cap < target:
             return False
-        if policy.survive_one_loss and reps:
-            worst = max(r.tokens_per_sec for r in reps)
+        if policy.survive_one_loss and rates:
+            worst = max(rates)
             if cap - worst < workload.target_tokens_per_sec:
                 return False
         return True
 
     replicas: List[Replica] = []
-    used: Set[int] = set(exclude)
+    used: Set[int] = set(exclude) | {
+        m for r in existing for m in r.allocation.markets
+    }
     relaxed = False
     for strict in (True, False):
-        cands = _admitted(workload, feats, policy, used)
+        cands = _admitted(workload, feats, policy, used, rate_correction)
         for a in cands:
-            if len(replicas) >= policy.max_replicas:
+            if len(existing) + len(replicas) >= policy.max_replicas:
                 break
             if satisfied(replicas):
                 break
             if any(m in used for m in a.markets):
                 continue
-            placed = [m for r in replicas for m in r.allocation.markets]
+            placed = [
+                m for r in existing for m in r.allocation.markets
+            ] + [m for r in replicas for m in r.allocation.markets]
             if strict and not _diverse(a, placed, feats, policy):
                 continue
             if not strict:
                 relaxed = True
             replicas.append(
-                Replica(len(replicas), a, replica_rate(workload, feats, a))
+                Replica(
+                    len(replicas), a, replica_rate(workload, feats, a, corr(a))
+                )
             )
             used.update(a.markets)
         if satisfied(replicas):
             break
-    if not replicas:
+    if not replicas and not existing:
         raise ValueError(
             f"no admitted allocation fits a {workload.state_gb} GB replica"
         )
@@ -262,6 +295,7 @@ def repair_fleet(
     survivors: Sequence[int],
     exclude: Set[int],
     lost: Replica,
+    rate_correction: Optional[RateCorrection] = None,
 ) -> Optional[Replica]:
     """Replacement for one revoked replica: low-correlated with the
     revoked market AND every surviving replica (step-13 semantics),
@@ -269,7 +303,7 @@ def repair_fleet(
     device shape (a same-shape replacement reuses the compiled serving
     step — the params-only reshard is the whole migration)."""
     used = set(exclude) | set(survivors) | {revoked_market}
-    cands = _admitted(workload, feats, policy, used)
+    cands = _admitted(workload, feats, policy, used, rate_correction)
     W = alg.find_low_correlation(
         feats, revoked_market, policy, surviving=tuple(survivors)
     )
@@ -277,17 +311,20 @@ def repair_fleet(
     pool = diverse if diverse else cands
     if not pool:
         return None
+    corr = rate_correction if rate_correction is not None else (lambda a: 1.0)
     lost_shape = lost.allocation.device_counts
     best = min(
         pool,
         key=lambda a: (
             0 if a.device_counts == lost_shape else 1,
             alg.allocation_price(a, feats)
-            / max(replica_rate(workload, feats, a), 1e-9),
+            / max(replica_rate(workload, feats, a, corr(a)), 1e-9),
             a.markets,
         ),
     )
-    return Replica(lost.replica_id, best, replica_rate(workload, feats, best))
+    return Replica(
+        lost.replica_id, best, replica_rate(workload, feats, best, corr(best))
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +343,12 @@ class FleetReport:
     markets_used: List[int]
     capacity_tokens_per_sec: float
     relaxed_correlation: bool = False
+    # demand-driven sizing counters (0 for every static-sized policy)
+    scale_ups: int = 0
+    scale_downs: int = 0
+    #: tokens of capacity the offered trace never used — what a
+    #: peak-sized fleet burns at night and the autoscaler exists to shed
+    idle_headroom_tokens: float = 0.0
 
     @property
     def cost_dollars(self) -> float:
@@ -314,6 +357,14 @@ class FleetReport:
     @property
     def slo_violation_seconds(self) -> float:
         return self.breakdown.time["slo_violation"] * SECONDS_PER_HOUR
+
+    @property
+    def p50_delay_seconds(self) -> float:
+        return self.router.p50_delay_seconds
+
+    @property
+    def p99_delay_seconds(self) -> float:
+        return self.router.p99_delay_seconds
 
 
 class FleetSimulator:
@@ -337,6 +388,16 @@ class FleetSimulator:
     engine's observed rate. With a measured rate equal to the analytic
     reference the two modes produce identical reports (pinned in
     tests/test_serve_fleet.py), so the analytic baseline stays bit-exact.
+
+    ``sizing`` selects WHEN capacity is sized: ``"static"`` (default, the
+    byte-exact pinned baseline) sizes once to the workload's fixed target
+    and only repairs revocations; ``"auto"`` walks the demand trace with
+    an :class:`repro.serve.autoscale.AutoScaler` — scale-up ahead of
+    forecast ramps, scale-down (cheapest-kept-first retirement) under the
+    low-water mark after a cooldown, and demand-driven repair: a revoked
+    replica is replaced only if the remaining fleet no longer clears the
+    CURRENT interval's bars, not unconditionally. ``sizing="auto"``
+    requires ``mode="fleet"``.
     """
 
     def __init__(
@@ -348,12 +409,17 @@ class FleetSimulator:
         overheads: OverheadModel = OverheadModel(),
         *,
         mode: str = "fleet",
+        sizing: str = "static",
+        autoscale: Optional[AutoscalePolicy] = None,
         tracker=None,  # Optional[dist.meshplan.ThroughputTracker]
         throughput_mode: str = "analytic",
         measured_tokens_per_sec: Optional[float] = None,
     ):
         assert mode in ("fleet", "static")
+        assert sizing in ("static", "auto")
         assert throughput_mode in ("analytic", "engine")
+        if sizing == "auto" and mode != "fleet":
+            raise ValueError("sizing='auto' requires mode='fleet'")
         if throughput_mode == "engine":
             if not measured_tokens_per_sec or measured_tokens_per_sec <= 0:
                 raise ValueError(
@@ -371,8 +437,17 @@ class FleetSimulator:
         self.policy = policy
         self.ov = overheads
         self.mode = mode
+        self.sizing = sizing
+        self.autoscale = autoscale if autoscale is not None else AutoscalePolicy()
         self.tracker = tracker
         self._rev = future.revocation_matrix()
+        # with a tracker wired in, provisioning itself consumes measured
+        # rates (ranking, sizing bars, Replica.tokens_per_sec); without
+        # one the analytic model stands and the hook stays None so the
+        # pinned baselines keep their exact float expressions
+        self._corr: Optional[RateCorrection] = (
+            self._rate_correction if tracker is not None else None
+        )
 
     # -- static-baseline provisioning (no market intelligence) ----------
     def _provision_static(self, exclude: Set[int]) -> FleetPlan:
@@ -390,6 +465,7 @@ class FleetSimulator:
         target = (
             self.workload.target_tokens_per_sec * self.policy.capacity_headroom
         )
+        corr = self._corr if self._corr is not None else (lambda a: 1.0)
         replicas: List[Replica] = []
         used = set(exclude)
         for a in cands:
@@ -401,7 +477,9 @@ class FleetSimulator:
                 continue
             replicas.append(
                 Replica(
-                    len(replicas), a, replica_rate(self.workload, self.feats, a)
+                    len(replicas),
+                    a,
+                    replica_rate(self.workload, self.feats, a, corr(a)),
                 )
             )
             used.update(a.markets)
@@ -451,12 +529,17 @@ class FleetSimulator:
         rate_tokens_per_sec: Sequence[float],
     ) -> FleetReport:
         """Serve ``rate_tokens_per_sec`` (offered tokens/sec per trace
-        hour) for ``hours`` trace hours under revocations."""
+        hour) for ``hours`` trace hours under revocations. With
+        ``sizing="auto"`` the demand-driven loop runs instead."""
+        if self.sizing == "auto":
+            return self._run_auto(hours, rate_tokens_per_sec)
         wl, policy, ov = self.workload, self.policy, self.ov
         bd = Breakdown()
         price = self.future.spot_price
         if self.mode == "fleet":
-            plan = provision_fleet(wl, self.feats, policy)
+            plan = provision_fleet(
+                wl, self.feats, policy, rate_correction=self._corr
+            )
         else:
             plan = self._provision_static(set())
         revocations = repairs = 0
@@ -499,7 +582,15 @@ class FleetSimulator:
             if restore_hours > 0:
                 s.add("recovery", restore_hours)
                 delay += restore_hours
-            rate = rep.tokens_per_sec * self._rate_correction(rep.allocation)
+            # a tracker-backed correction is already in the provisioned
+            # rate (self._corr); re-derive it here only on the legacy
+            # tracker-less path, where it is exactly 1.0
+            corr = (
+                1.0
+                if self._corr is not None
+                else self._rate_correction(rep.allocation)
+            )
+            rate = rep.tokens_per_sec * corr
             live.append(
                 (dataclasses.replace(rep, tokens_per_sec=rate), at, at + delay, s)
             )
@@ -542,6 +633,7 @@ class FleetSimulator:
                     survivors=survivors,
                     exclude=revoked,
                     lost=rep,
+                    rate_correction=self._corr,
                 )
                 if newrep is not None:
                     mig = migration_cost(
@@ -613,7 +705,232 @@ class FleetSimulator:
             markets_used=markets_used,
             capacity_tokens_per_sec=plan.capacity_tokens_per_sec,
             relaxed_correlation=plan.relaxed_correlation,
+            idle_headroom_tokens=idle_headroom_tokens(
+                rate_tokens_per_sec, cap_events, hours=hours
+            ),
         )
+
+    # -- demand-driven sizing (the autoscaler loop) ----------------------
+    def _run_auto(
+        self,
+        hours: float,
+        rate_tokens_per_sec: Sequence[float],
+    ) -> FleetReport:
+        """Hour-driven demand loop: every trace hour the scaler forecasts
+        the offered load, and the fleet is resized against the SAME bars
+        ``provision_fleet`` enforces — scale-up ahead of ramps (never
+        cooldown-gated), scale-down of the worst $/token replicas under
+        the low-water mark (cooldown-gated, floored at the live offered
+        rate and ``min_replicas``), and demand-driven repair: a revoked
+        replica is replaced only when the survivors no longer clear the
+        current target. Billing, migration pricing, and routing reuse the
+        static loop's primitives unchanged — a scale-up replica is a
+        params-only wire migration from the survivors (no in-flight
+        contexts to re-prefill: it joins empty), a scale-down settles the
+        retiree's session at the decision instant, and its in-flight
+        streams drain to the survivors (``autoscale.drain_replica`` is
+        the engine-level form, token-identical by the shed→resume pin).
+        """
+        wl, policy, ov = self.workload, self.policy, self.ov
+        bd = Breakdown()
+        price = self.future.spot_price
+        scaler = AutoScaler(
+            self.autoscale,
+            capacity_headroom=policy.capacity_headroom,
+            survive_one_loss=policy.survive_one_loss,
+        )
+        revocations = repairs = 0
+        migrated = restored = 0
+        markets_used: List[int] = []
+        n_provisioned = 0
+        relaxed = False
+        peak_capacity = 0.0
+        revoked: Set[int] = set()
+        next_id = 0
+
+        live: List[Tuple[Replica, float, float, Session]] = []
+        cap_deltas: List[Tuple[float, float]] = []
+
+        def start_replica(rep: Replica, at: float, mig: Optional[MigrationCost]):
+            nonlocal next_id, n_provisioned
+            s = Session(
+                rep.allocation.legs[0].market, at, legs=rep.allocation.markets
+            )
+            s.add("startup", ov.startup_hours)
+            delay = ov.startup_hours
+            if mig is not None:
+                s.add("reshard", mig.wire_hours)
+                s.add("re_execution", mig.recompute_hours)
+                delay += mig.hours
+            rep = dataclasses.replace(rep, replica_id=next_id)
+            next_id += 1
+            n_provisioned += 1
+            markets_used.extend(rep.allocation.markets)
+            live.append((rep, at, at + delay, s))
+            cap_deltas.append((at + delay, rep.tokens_per_sec))
+
+        def settle_replica(idx: int, at: float) -> Replica:
+            rep, t0, t_live, session = live.pop(idx)
+            session.add("execution", max(at - t0 - session.used_hours, 0.0))
+            bill_session(session, price, bd)
+            # capacity leaves at the decision instant — or never arrives,
+            # if the replica dies mid-startup
+            cap_deltas.append((max(at, t_live), -rep.tokens_per_sec))
+            return rep
+
+        def scale_up(at: float, target: float, extra_exclude: Set[int]) -> bool:
+            nonlocal migrated, relaxed
+            wl_t = dataclasses.replace(wl, target_tokens_per_sec=target)
+            holding = [r for r, _, _, _ in live]
+            try:
+                plan = provision_fleet(
+                    wl_t, self.feats, policy,
+                    exclude=revoked | extra_exclude,
+                    existing=holding,
+                    rate_correction=self._corr,
+                )
+            except ValueError:
+                return False  # pool starved: best effort, router bills it
+            for newrep in plan.replicas:
+                mig = None
+                if live:
+                    # survivors hold the params: a new replica is a
+                    # params-only wire migration; it joins with no
+                    # in-flight contexts, so nothing is re-prefilled
+                    mig = migration_cost(
+                        param_bytes=wl.param_bytes,
+                        cache_bytes=0,
+                        cache_policy="drop",
+                        dcn_gbps=newrep.allocation.dcn_gbps,
+                    )
+                    migrated += mig.moved_bytes
+                start_replica(newrep, at, mig)
+            relaxed = relaxed or plan.relaxed_correlation
+            return bool(plan.replicas)
+
+        def scale_down(at: float, target: float) -> bool:
+            def dollars_per_token(rep: Replica) -> float:
+                return alg.allocation_price(rep.allocation, self.feats) / max(
+                    rep.tokens_per_sec, 1e-9
+                )
+
+            retired = False
+            while len(live) > self.autoscale.min_replicas:
+                idx = max(
+                    range(len(live)),
+                    key=lambda i: (
+                        dollars_per_token(live[i][0]),
+                        live[i][0].allocation.markets,
+                    ),
+                )
+                trial = [
+                    r.tokens_per_sec
+                    for j, (r, _, _, _) in enumerate(live)
+                    if j != idx
+                ]
+                if not scaler.satisfied(trial, target):
+                    break
+                settle_replica(idx, at)
+                retired = True
+            return retired
+
+        # initial fleet, sized to hour 0's forecast (a cold start has no
+        # survivors to migrate params from)
+        fc0 = scaler.forecast(rate_tokens_per_sec, 0)
+        offered0 = (
+            float(rate_tokens_per_sec[0]) if len(rate_tokens_per_sec) else 0.0
+        )
+        target0 = max(fc0, offered0)
+        scale_up(0.0, target0, self._revoking_at(0))
+        scaler.record(0.0, "init")  # arms the cooldown, not a scale event
+
+        n_hours = int(hours)
+        for h in range(n_hours):
+            now = float(h)
+            # 1) revocations landing this hour (same trace semantics as
+            # the static loop: market m revokes at hour h)
+            revoking = self._revoking_at(h)
+            for i in reversed(range(len(live))):
+                rep = live[i][0]
+                hit = [m for m in rep.allocation.markets if m in revoking]
+                if hit:
+                    settle_replica(i, now)
+                    revocations += 1
+                    revoked.update(hit)
+            # 2) the scaler's verdict for this interval
+            offered_now = float(
+                rate_tokens_per_sec[min(h, len(rate_tokens_per_sec) - 1)]
+            ) if len(rate_tokens_per_sec) else 0.0
+            fc = scaler.forecast(rate_tokens_per_sec, h)
+            decision = scaler.decide(
+                now,
+                [r.tokens_per_sec for r, _, _, _ in live],
+                forecast=fc,
+                offered_now=offered_now,
+            )
+            if decision.kind == "up":
+                # demand-driven repair and ramp scale-up are the same
+                # move: add capacity until the bars clear again
+                grew = scale_up(
+                    now, decision.target_tokens_per_sec, revoking
+                )
+                if grew:
+                    if revoking:
+                        repairs += 1
+                    scaler.record(now, "up")
+            elif decision.kind == "down":
+                if scale_down(now, decision.target_tokens_per_sec):
+                    scaler.record(now, "down")
+            peak_capacity = max(
+                peak_capacity, sum(r.tokens_per_sec for r, _, _, _ in live)
+            )
+
+        # drain to the end of the window, settle every open session
+        for _rep, t0, _, session in live:
+            session.add("execution", max(hours - t0 - session.used_hours, 0.0))
+            bill_session(session, price, bd)
+
+        cap_events: List[CapacityEvent] = [CapacityEvent(0.0, 0.0)]
+        level = 0.0
+        for at, delta in sorted(cap_deltas):
+            level += delta
+            cap_events.append(CapacityEvent(at, max(level, 0.0)))
+
+        stats = route_trace(
+            rate_tokens_per_sec,
+            cap_events,
+            max_delay_seconds=policy.max_delay_seconds,
+            shed_delay_seconds=policy.shed_delay_seconds,
+            hours=hours,
+        )
+        stats.merge_into(bd)
+        bd.revocations = revocations
+        bd.wall_time = float(hours)
+        return FleetReport(
+            breakdown=bd,
+            router=stats,
+            revocations=revocations,
+            repairs=repairs,
+            migrated_bytes=migrated,
+            restored_bytes=restored,
+            replicas_provisioned=n_provisioned,
+            markets_used=markets_used,
+            capacity_tokens_per_sec=peak_capacity,
+            relaxed_correlation=relaxed,
+            scale_ups=scaler.scale_ups,
+            scale_downs=scaler.scale_downs,
+            idle_headroom_tokens=idle_headroom_tokens(
+                rate_tokens_per_sec, cap_events, hours=hours
+            ),
+        )
+
+    def _revoking_at(self, hour: int) -> Set[int]:
+        """Markets whose spot request is revoked at trace hour ``hour`` —
+        excluded from same-hour provisioning (a replica placed on one
+        would die before it finished starting)."""
+        if hour < 0 or hour >= self._rev.shape[1]:
+            return set()
+        return {int(m) for m in np.nonzero(self._rev[:, hour])[0]}
 
 
 def on_demand_reference(
@@ -654,9 +971,13 @@ def on_demand_reference(
         s.add("startup", overheads.startup_hours)
         s.add("execution", max(hours - overheads.startup_hours, 0.0))
         bill_session(s, lambda m, h: od_price, bd)
+    cap_events = [
+        CapacityEvent(0.0, 0.0),
+        CapacityEvent(overheads.startup_hours, k * rate),
+    ]
     stats = route_trace(
         rate_tokens_per_sec,
-        [CapacityEvent(0.0, 0.0), CapacityEvent(overheads.startup_hours, k * rate)],
+        cap_events,
         max_delay_seconds=policy.max_delay_seconds,
         shed_delay_seconds=policy.shed_delay_seconds,
         hours=hours,
@@ -673,4 +994,7 @@ def on_demand_reference(
         replicas_provisioned=k,
         markets_used=[best] * k,
         capacity_tokens_per_sec=k * rate,
+        idle_headroom_tokens=idle_headroom_tokens(
+            rate_tokens_per_sec, cap_events, hours=hours
+        ),
     )

@@ -29,10 +29,22 @@ Queue model over one interval of ``seconds`` with constant offered rate
 Token conservation holds exactly per interval and is pinned by tests:
 ``q0 + offered == served + shed + q_end``.
 
+* **latency percentiles** — every linear backlog segment also records the
+  estimated delay ``d(t) = q(t)/c`` seen by tokens *arriving* during it,
+  as a ``(token_weight, d_start, d_end)`` triple. Arrivals are uniform in
+  time, so within a segment the delay is uniform on ``[d_start, d_end]``
+  (an atom when the backlog is flat). ``RouterStats.latency_percentile``
+  inverts the resulting piecewise-linear CDF exactly — p50/p99 come from
+  the same closed-form segments as the violation clock, never from
+  sampling. Shed tokens carry no weight (they are lost demand, not a
+  latency sample), and a zero-capacity interval contributes violation
+  seconds but no finite delay sample.
+
 The counters land on :class:`repro.core.accounting.Breakdown` as
 first-class components: the violation clock in ``time["slo_violation"]``,
 the token volumes in ``served_tokens`` / ``shed_tokens`` /
-``queued_token_seconds``.
+``queued_token_seconds``. Percentiles stay on :class:`RouterStats` (they
+are diagnostics over the same conserved tokens, not a new component).
 """
 from __future__ import annotations
 
@@ -52,6 +64,16 @@ class RouterStats:
     shed_tokens: float = 0.0
     queued_token_seconds: float = 0.0
     slo_violation_seconds: float = 0.0
+    #: backlog (tokens) left at the end of the routed span — the ``q_end``
+    #: term of the conservation identity ``q0 + offered == served + shed
+    #: + q_end``.
+    q_end: float = 0.0
+    #: ``(token_weight, delay_start_s, delay_end_s)`` per linear backlog
+    #: segment: the estimated delay seen by tokens arriving during the
+    #: segment, weighted by how many arrived (shed tokens excluded).
+    delay_segments: List[Tuple[float, float, float]] = dataclasses.field(
+        default_factory=list
+    )
 
     def add(self, other: "RouterStats") -> "RouterStats":
         self.offered_tokens += other.offered_tokens
@@ -59,7 +81,65 @@ class RouterStats:
         self.shed_tokens += other.shed_tokens
         self.queued_token_seconds += other.queued_token_seconds
         self.slo_violation_seconds += other.slo_violation_seconds
+        # ``other`` is the later span: its backlog is the running backlog
+        self.q_end = other.q_end
+        self.delay_segments.extend(other.delay_segments)
         return self
+
+    def latency_percentile(self, frac: float) -> float:
+        """Invert the exact token-weighted delay CDF at ``frac`` ∈ [0, 1].
+
+        Each segment spreads its token weight uniformly over
+        ``[d_start, d_end]`` (delay is linear in time, arrivals uniform in
+        time); a flat segment is an atom. The CDF is piecewise linear with
+        jumps at atoms, and the inversion is exact — no sampling, no
+        interpolation error beyond float arithmetic. Returns 0.0 when no
+        tokens carried a delay sample.
+        """
+        segs = [
+            (min(d0, d1), max(d0, d1), w)
+            for (w, d0, d1) in self.delay_segments
+            if w > 0.0
+        ]
+        if not segs:
+            return 0.0
+        total = sum(w for _, _, w in segs)
+        target = min(max(float(frac), 0.0), 1.0) * total
+
+        def cdf(d: float) -> float:
+            mass = 0.0
+            for lo, hi, w in segs:
+                if hi <= lo:
+                    mass += w if d >= lo else 0.0
+                else:
+                    mass += w * min(max((d - lo) / (hi - lo), 0.0), 1.0)
+            return mass
+
+        points = sorted({p for lo, hi, _ in segs for p in (lo, hi)})
+        prev, prev_mass = points[0], cdf(points[0])
+        if prev_mass >= target:
+            return prev
+        for point in points[1:]:
+            mass = cdf(point)
+            if mass >= target:
+                slope = sum(
+                    w / (hi - lo)
+                    for lo, hi, w in segs
+                    if hi > lo and lo <= prev and point <= hi
+                )
+                if slope <= 0.0:
+                    return point  # target sits inside an atom's jump
+                return min(prev + (target - prev_mass) / slope, point)
+            prev, prev_mass = point, mass
+        return points[-1]
+
+    @property
+    def p50_delay_seconds(self) -> float:
+        return self.latency_percentile(0.50)
+
+    @property
+    def p99_delay_seconds(self) -> float:
+        return self.latency_percentile(0.99)
 
     def merge_into(self, bd: Breakdown) -> None:
         """Land the counters on the shared Breakdown: the violation clock
@@ -89,7 +169,7 @@ def drain_interval(
     T = float(seconds)
     q0 = max(float(queue_tokens), 0.0)
     if T <= 0:
-        return q0, RouterStats()
+        return q0, RouterStats(q_end=q0)
     stats = RouterStats(offered_tokens=a * T)
 
     cap = c * float(shed_delay_seconds)
@@ -111,19 +191,26 @@ def drain_interval(
     net = a - c
     if net > 0.0 and q + net * T > cap:
         # backlog hits the abandonment cap at t_cap and rides it, shedding
-        # the net inflow from then on
+        # the net inflow from then on; only the admitted rate (c) of the
+        # cap-riding arrivals carries latency weight
         t_cap = (cap - q) / net
         stats.shed_tokens += net * (T - t_cap)
-        segs = _linear_segments(q, net, t_cap) + [(T - t_cap, cap, cap)]
+        pre = _linear_segments(q, net, t_cap)
+        segs = pre + [(T - t_cap, cap, cap)]
+        weights = [a * dur for dur, _, _ in pre] + [c * (T - t_cap)]
     else:
         segs = _linear_segments(q, net, T)
+        weights = [a * dur for dur, _, _ in segs]
 
     q_end = segs[-1][2]
-    for dur, qa, qb in segs:
+    for (dur, qa, qb), w in zip(segs, weights):
         stats.queued_token_seconds += 0.5 * (qa + qb) * dur
         stats.slo_violation_seconds += _time_above(qa, qb, dur, slo_q)
+        if w > 0.0:
+            stats.delay_segments.append((w, qa / c, qb / c))
     # conservation: served = inflow - shed - backlog growth (exact)
     stats.served_tokens = q0 + a * T - stats.shed_tokens - q_end
+    stats.q_end = q_end
     return q_end, stats
 
 
@@ -204,3 +291,38 @@ def route_trace(
         )
         stats.add(s)
     return stats
+
+
+def idle_headroom_tokens(
+    rate_tokens_per_sec: Sequence[float],
+    capacity_events: Iterable[CapacityEvent],
+    *,
+    hours: Optional[float] = None,
+) -> float:
+    """Tokens of provisioned capacity the offered trace never used:
+    ``∫ max(capacity(t) − offered(t), 0) dt`` over the window, walking the
+    exact hour-mark/event-time boundaries of :func:`route_trace`. This is
+    the over-provisioning the demand-driven autoscaler exists to shed —
+    a statically peak-sized fleet burns it all night."""
+    events = sorted(capacity_events, key=lambda e: e.at_hours)
+    assert events and events[0].at_hours <= 0.0, "capacity at t=0 required"
+    end = float(hours if hours is not None else len(rate_tokens_per_sec))
+    marks = sorted(
+        {float(h) for h in range(int(end) + 1)}
+        | {e.at_hours for e in events if 0.0 < e.at_hours < end}
+        | {end}
+    )
+    cap_i = 0
+    idle = 0.0
+    for t0, t1 in zip(marks, marks[1:]):
+        if t1 <= t0:
+            continue
+        while cap_i + 1 < len(events) and events[cap_i + 1].at_hours <= t0 + 1e-12:
+            cap_i += 1
+        rate_idx = min(int(t0), len(rate_tokens_per_sec) - 1)
+        headroom = events[cap_i].tokens_per_sec - float(
+            rate_tokens_per_sec[rate_idx]
+        )
+        if headroom > 0.0:
+            idle += headroom * (t1 - t0) * SECONDS_PER_HOUR
+    return idle

@@ -42,6 +42,19 @@ def _install_hypothesis_fallback():
 
         return _Strategy(draw)
 
+    def booleans(**_kw):
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(values, **_kw):
+        pool = list(values)
+
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    def tuples(*strategies, **_kw):
+        return _Strategy(
+            lambda rng: tuple(s.example(rng) for s in strategies)
+        )
+
     def settings(max_examples=25, **_kw):
         def deco(f):
             f._fallback_max_examples = max_examples
@@ -78,6 +91,8 @@ def _install_hypothesis_fallback():
     mod.given, mod.settings = given, settings
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.floats, st_mod.integers, st_mod.lists = floats, integers, lists
+    st_mod.booleans, st_mod.sampled_from = booleans, sampled_from
+    st_mod.tuples = tuples
     mod.strategies = st_mod
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st_mod

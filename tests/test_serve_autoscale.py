@@ -1,0 +1,337 @@
+"""Property-test harness for the demand-driven autoscaler (the
+scaler/router/engine loop): token conservation across arbitrary
+scale-up/scale-down sequences, capacity never below the in-flight
+floor, cooldown respected on random traces — plus the AutoScaler rule
+unit tests and the end-to-end auto-vs-static pin on a diurnal trace."""
+import math
+
+from hypothesis import given, settings, strategies as st
+import numpy as np
+import pytest
+
+from repro.core.market import Market, MarketSet
+from repro.serve import (
+    AutoscalePolicy,
+    AutoScaler,
+    CapacityEvent,
+    FleetSimulator,
+    ServePolicy,
+    ServingWorkload,
+    idle_headroom_tokens,
+    route_trace,
+)
+
+HEADROOM = 1.25
+
+
+def _scaler(policy=None, *, headroom=HEADROOM, survive=True):
+    return AutoScaler(
+        policy or AutoscalePolicy(),
+        capacity_headroom=headroom,
+        survive_one_loss=survive,
+    )
+
+
+# --- the rule engine, one rule at a time ------------------------------------
+
+def test_forecast_is_window_max_clamped_to_trace():
+    s = _scaler(AutoscalePolicy(forecast_window_hours=3))
+    trace = [10.0, 50.0, 20.0, 80.0, 5.0]
+    assert s.forecast(trace, 0) == 50.0   # [10, 50, 20]
+    assert s.forecast(trace, 1) == 80.0   # [50, 20, 80]
+    assert s.forecast(trace, 4) == 5.0    # window past the end
+    assert s.forecast(trace, 99) == 5.0   # clamped to last hour
+    assert s.forecast([], 0) == 0.0
+
+
+def test_satisfied_mirrors_provisioning_bars():
+    s = _scaler(headroom=1.25)
+    # headroom bar: 3×100 < 300×1.25
+    assert not s.satisfied([100.0, 100.0, 100.0], 300.0)
+    # N−1 bar: 500 capacity but losing the 400 leaves 100 < 200
+    assert not s.satisfied([400.0, 100.0], 200.0)
+    assert s.satisfied([150.0, 150.0, 150.0], 300.0)
+    # without survive_one_loss only the headroom bar remains
+    assert _scaler(survive=False).satisfied([400.0, 100.0], 200.0)
+
+
+def test_decide_scale_up_ignores_cooldown():
+    s = _scaler()
+    s.record(0.0, "init")
+    d = s.decide(0.5, [100.0], forecast=500.0, offered_now=50.0)
+    assert d.kind == "up" and d.target_tokens_per_sec == 500.0
+
+
+def test_decide_target_floors_at_offered_rate():
+    """The in-flight floor: a forecast of zero can never size the fleet
+    below live traffic."""
+    s = _scaler()
+    d = s.decide(10.0, [100.0, 100.0], forecast=0.0, offered_now=90.0)
+    assert d.target_tokens_per_sec == 90.0
+    assert d.kind != "up"  # 200 ≥ 90×1.25 and 200−100 ≥ 90
+
+
+def test_decide_scale_down_needs_low_water_cooldown_and_min_replicas():
+    pol = AutoscalePolicy(low_water=0.5, cooldown_hours=3.0, min_replicas=2)
+    rates = [100.0, 100.0, 100.0, 100.0]
+    # utilization 50×1.25/400 = 0.156 < 0.5, but cooldown armed at t=0
+    s = _scaler(pol)
+    s.record(0.0, "init")
+    assert s.decide(2.0, rates, forecast=50.0, offered_now=50.0).kind == "hold"
+    assert s.decide(3.0, rates, forecast=50.0, offered_now=50.0).kind == "down"
+    # min_replicas floor wins even when utilization is low
+    s2 = _scaler(pol)
+    assert s2.decide(9.0, [100.0, 100.0], forecast=10.0, offered_now=10.0).kind == "hold"
+    # above the low-water mark: hold
+    s3 = _scaler(pol)
+    assert s3.decide(9.0, rates, forecast=200.0, offered_now=200.0).kind == "hold"
+
+
+def test_record_counts_events_and_ignores_hold():
+    s = _scaler()
+    s.record(0.0, "init")
+    s.record(1.0, "hold")
+    s.record(2.0, "up")
+    s.record(6.0, "down")
+    assert s.scale_ups == 1 and s.scale_downs == 1
+    assert s.events == [(0.0, "init"), (2.0, "up"), (6.0, "down")]
+    with pytest.raises(AssertionError):
+        s.record(7.0, "sideways")
+
+
+def test_autoscale_policy_validates():
+    for bad in (
+        dict(forecast_window_hours=0),
+        dict(low_water=0.0),
+        dict(low_water=1.0),
+        dict(cooldown_hours=-1.0),
+        dict(min_replicas=0),
+    ):
+        with pytest.raises(AssertionError):
+            AutoscalePolicy(**bad)
+
+
+# --- the property harness: scaler loop on random traces ---------------------
+
+def _drive(scaler, trace, unit=50.0):
+    """Run the scaler's own loop shape (provision-until-satisfied on up,
+    guarded single retire on down) over an hourly trace; returns the
+    capacity timeline as CapacityEvents plus the final replica rates."""
+    rates = []
+    target0 = max(scaler.forecast(trace, 0), trace[0] if len(trace) else 0.0)
+    while not scaler.satisfied(rates, target0) or (
+        len(rates) < scaler.policy.min_replicas
+    ):
+        rates.append(unit)
+    scaler.record(0.0, "init")
+    events = [CapacityEvent(0.0, sum(rates))]
+    for h, offered in enumerate(trace):
+        d = scaler.decide(
+            float(h), rates, forecast=scaler.forecast(trace, h),
+            offered_now=offered,
+        )
+        # the in-flight floor: the target never sizes below live traffic
+        assert d.target_tokens_per_sec >= offered
+        if d.kind == "up":
+            while not scaler.satisfied(rates, d.target_tokens_per_sec):
+                rates.append(unit)
+            scaler.record(float(h), "up")
+        elif d.kind == "down":
+            trial = rates[:-1]
+            if len(trial) >= scaler.policy.min_replicas and scaler.satisfied(
+                trial, d.target_tokens_per_sec
+            ):
+                rates = trial
+                scaler.record(float(h), "down")
+        if events[-1].tokens_per_sec != sum(rates):
+            events.append(CapacityEvent(float(h), sum(rates)))
+        # capacity never drops below the in-flight floor after any event
+        assert scaler.satisfied(rates, offered), (h, offered, rates)
+    return events, rates
+
+
+@given(
+    trace=st.lists(st.floats(0.0, 400.0), min_size=1, max_size=24),
+    window=st.integers(1, 4),
+    cooldown=st.floats(0.0, 6.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_scaler_loop_token_conservation_on_random_traces(
+    trace, window, cooldown
+):
+    """q0 + offered == served + shed + q_end across ARBITRARY scale
+    sequences: whatever capacity timeline the scaler produces, the router
+    neither invents nor loses tokens."""
+    scaler = _scaler(
+        AutoscalePolicy(forecast_window_hours=window, cooldown_hours=cooldown)
+    )
+    events, _ = _drive(scaler, trace)
+    stats = route_trace(
+        trace, events, max_delay_seconds=30.0, shed_delay_seconds=120.0
+    )
+    inflow = stats.offered_tokens  # q0 == 0
+    outflow = stats.served_tokens + stats.shed_tokens + stats.q_end
+    assert inflow == pytest.approx(outflow, rel=1e-9, abs=1e-6)
+    assert stats.shed_tokens >= -1e-9 and stats.q_end >= -1e-9
+
+
+@given(
+    trace=st.lists(st.floats(0.0, 400.0), min_size=1, max_size=24),
+    cooldown=st.floats(0.0, 8.0),
+    min_replicas=st.integers(1, 3),
+)
+@settings(max_examples=60, deadline=None)
+def test_scaler_capacity_never_below_inflight_floor(
+    trace, cooldown, min_replicas
+):
+    """After every decision the surviving fleet still clears the OFFERED
+    rate with full headroom and N−1 margin — scale-downs can never cut
+    into live traffic (asserted inside _drive), and the replica count
+    never falls below min_replicas."""
+    scaler = _scaler(
+        AutoscalePolicy(cooldown_hours=cooldown, min_replicas=min_replicas)
+    )
+    _, rates = _drive(scaler, trace)
+    assert len(rates) >= min_replicas
+
+
+@given(
+    trace=st.lists(
+        st.tuples(st.booleans(), st.floats(0.0, 400.0)),
+        min_size=2,
+        max_size=36,
+    ),
+    cooldown=st.sampled_from([0.0, 1.0, 3.0, 5.5]),
+)
+@settings(max_examples=60, deadline=None)
+def test_scaler_cooldown_respected_on_random_traces(trace, cooldown):
+    """No realized scale-DOWN lands within cooldown_hours of the previous
+    scale event (up, down, or init); scale-ups are exempt."""
+    # spike the trace so both directions actually fire
+    offered = [v if calm else v + 600.0 for calm, v in trace]
+    scaler = _scaler(AutoscalePolicy(cooldown_hours=cooldown, low_water=0.7))
+    _drive(scaler, offered, unit=150.0)
+    for (t_prev, _), (t, kind) in zip(scaler.events, scaler.events[1:]):
+        if kind == "down":
+            assert t - t_prev >= cooldown, scaler.events
+
+
+# --- end-to-end: FleetSimulator(sizing="auto") ------------------------------
+
+def _hand_markets():
+    """Six calm 4-device markets in distinct regions; in the future
+    window B revokes at hour 30 — the surprise the auto fleet must
+    absorb mid-trace. Six (not four) so scale-up has spare diversity."""
+    regions = [
+        "us-east-1", "eu-west-1", "ap-southeast-1",
+        "eu-central-1", "us-west-2", "sa-east-1",
+    ]
+    mk = [
+        Market(i, f"g4.{chr(97 + i)}", r, f"{r}a", 10, 1.0,
+               device_count=4, interconnect_gbps=25.0)
+        for i, r in enumerate(regions)
+    ]
+    H = 24 * 90
+    hp = np.full((len(mk), H), 0.35)
+    F = 48
+    fp = np.full((len(mk), F), 0.35)
+    fp[1, 30:32] = 1.5  # B revokes at future hour 30
+    return MarketSet(mk, hp), MarketSet(mk, fp, start_hour=H)
+
+
+def _workload():
+    gib = 1 << 30
+    return ServingWorkload(
+        target_tokens_per_sec=500.0,
+        replica_tokens_per_sec=100.0,
+        state_gb=30.0,
+        param_bytes=int(0.12 * gib),
+        cache_bytes=int(0.03 * gib),
+        inflight_context_tokens=2048.0,
+    )
+
+
+def _diurnal(hours):
+    t = np.arange(hours, dtype=float)
+    rate = 300.0 - 200.0 * np.cos(2 * math.pi * ((t % 24) / 24.0))
+    rate[0] = 0.0
+    return rate
+
+
+@pytest.fixture(scope="module")
+def auto_run():
+    hist, fut = _hand_markets()
+    wl = _workload()
+    policy = ServePolicy(
+        slo_horizon_hours=24.0, capacity_headroom=1.25, cache_policy="drop"
+    )
+    rate = _diurnal(48)
+    static = FleetSimulator(hist, fut, wl, policy).run(48.0, rate)
+    auto = FleetSimulator(hist, fut, wl, policy, sizing="auto").run(48.0, rate)
+    return static, auto, rate
+
+
+def test_auto_sizing_cheaper_than_static_at_zero_violation(auto_run):
+    static, auto, _ = auto_run
+    assert auto.slo_violation_seconds == 0.0
+    assert auto.cost_dollars < static.cost_dollars
+    assert auto.idle_headroom_tokens < static.idle_headroom_tokens
+
+
+def test_auto_sizing_conserves_tokens_and_scales_both_ways(auto_run):
+    _, auto, _ = auto_run
+    r = auto.router
+    assert r.offered_tokens == pytest.approx(
+        r.served_tokens + r.shed_tokens + r.q_end, rel=1e-9, abs=1e-3
+    )
+    assert auto.scale_ups > 0 and auto.scale_downs > 0
+    assert auto.replicas_provisioned > 0
+    assert auto.p99_delay_seconds <= 30.0  # zero violation ⇒ p99 within SLO
+
+
+def test_auto_sizing_is_deterministic(auto_run):
+    _, auto, rate = auto_run
+    hist, fut = _hand_markets()
+    again = FleetSimulator(
+        hist, fut, _workload(),
+        ServePolicy(
+            slo_horizon_hours=24.0, capacity_headroom=1.25, cache_policy="drop"
+        ),
+        sizing="auto",
+    ).run(48.0, rate)
+    assert again.cost_dollars == auto.cost_dollars
+    assert again.router.served_tokens == auto.router.served_tokens
+    assert again.scale_ups == auto.scale_ups
+    assert again.scale_downs == auto.scale_downs
+
+
+def test_auto_sizing_survives_revocation(auto_run):
+    """us-b revokes at future hour 30: the auto fleet repairs (or proves
+    the survivors already clear the bar) and still ends at zero
+    violation-seconds."""
+    _, auto, _ = auto_run
+    assert auto.revocations >= 1
+
+
+def test_auto_requires_fleet_mode():
+    hist, fut = _hand_markets()
+    with pytest.raises(ValueError):
+        FleetSimulator(
+            hist, fut, _workload(), ServePolicy(), mode="static", sizing="auto"
+        )
+    with pytest.raises(AssertionError):
+        FleetSimulator(
+            hist, fut, _workload(), ServePolicy(), sizing="bogus"
+        )
+
+
+def test_idle_headroom_integral_hand_computed():
+    """2 hours at capacity 100 against offered [40, 120]: headroom is
+    60 tok/s for the first hour, 0 for the second."""
+    got = idle_headroom_tokens([40.0, 120.0], [CapacityEvent(0.0, 100.0)])
+    assert got == pytest.approx(60.0 * 3600.0)
+    # a capacity step mid-trace splits the integral at the event time
+    got2 = idle_headroom_tokens(
+        [40.0, 40.0], [CapacityEvent(0.0, 100.0), CapacityEvent(1.5, 40.0)]
+    )
+    assert got2 == pytest.approx(60.0 * 1.5 * 3600.0)

@@ -88,6 +88,42 @@ def test_engine_shed_resume_token_identical(served):
         assert c.tokens == by_rid[c.rid].tokens, c.rid
 
 
+def test_engine_scale_down_drain_token_identical(served):
+    """The autoscaler's scale-down path: ``drain_replica`` sheds every
+    in-flight stream from the retiring engine and resubmits on a
+    survivor that is already serving its own traffic — every stream,
+    moved or resident, completes token-identically to uninterrupted
+    serving. A scale-down is as invisible as a revocation."""
+    from repro.serve import drain_replica
+
+    cfg, model, layout, mesh, params, reqs, _, done = served
+    by_rid = {c.rid: c for c in done}
+    retiring = DecodeEngine(model, layout, mesh, lanes=2, num_pages=9, max_context=48)
+    survivor = DecodeEngine(model, layout, mesh, lanes=2, num_pages=9, max_context=48)
+    for r in reqs[:2]:
+        retiring.submit(r)
+    survivor.submit(reqs[2])
+    for _ in range(3):
+        retiring.step(params)
+    n = drain_replica(retiring, survivor)
+    assert n == 2
+    assert not retiring.completions and retiring.occupancy == 0.0
+    for c in survivor.run(params):
+        assert c.tokens == by_rid[c.rid].tokens, c.rid
+    assert {c.rid for c in survivor.completions} == {0, 1, 2}
+
+
+def test_engine_occupancy_tracks_live_lanes(served):
+    cfg, model, layout, mesh, params, reqs, *_ = served
+    eng = DecodeEngine(model, layout, mesh, lanes=2, num_pages=9, max_context=48)
+    assert eng.occupancy == 0.0
+    eng.submit(reqs[0])
+    eng.step(params)
+    assert eng.occupancy == 0.5
+    eng.run(params)
+    assert eng.occupancy == 0.0
+
+
 def test_engine_feeds_throughput_tracker(served):
     cfg, model, layout, mesh, params, reqs, *_ = served
     from repro.dist.meshplan import ThroughputTracker

@@ -45,11 +45,13 @@ ORCH_SPLIT_KEYS = {
 }
 SERVE_POLICY_KEYS = {
     "cost_usd", "slo_violation_seconds", "served_tokens", "shed_tokens",
-    "queued_token_seconds", "revocations", "repairs", "migrated_bytes",
-    "restored_bytes", "replicas_provisioned", "capacity_tokens_per_sec",
+    "queued_token_seconds", "p50_delay_seconds", "p99_delay_seconds",
+    "revocations", "repairs", "migrated_bytes",
+    "restored_bytes", "replicas_provisioned", "scale_ups", "scale_downs",
+    "idle_headroom_tokens", "capacity_tokens_per_sec",
     "billing_buffer_usd",
 }
-SERVE_POLICIES = {"fleet", "on_demand", "static"}
+SERVE_POLICIES = {"fleet", "autoscale", "on_demand", "static"}
 KERNEL_BENCH_KEYS = {
     "prompt_len", "max_context", "decode_steps", "page_size", "backend",
     "batches",
@@ -117,7 +119,36 @@ def check_serve(errors, name, data):
             missing = SERVE_POLICY_KEYS - set(rep)
             _require(errors, not missing,
                      f"{name}: scenario {sid}.{p} missing {sorted(missing)}")
+        check_autoscale_inequality(errors, name, s)
     check_kernel_bench(errors, name, data)
+
+
+def check_autoscale_inequality(errors, name, scenario):
+    """The committed diurnal numbers must still show the tentpole result
+    the bench asserted at measurement time: the demand-driven autoscaler
+    STRICTLY cheaper than the static-peak fleet at ZERO SLO-violation
+    seconds (and with real night-time headroom shed). A regenerated
+    BENCH_serve.json where autoscaling stopped paying fails CI here, not
+    in a human's diff review."""
+    if scenario.get("name") != "diurnal":
+        return
+    pols = scenario.get("policies", {})
+    auto, fleet = pols.get("autoscale"), pols.get("fleet")
+    if not isinstance(auto, dict) or not isinstance(fleet, dict):
+        return  # missing-policy error already recorded
+    sid = scenario.get("id")
+    _require(errors, auto.get("slo_violation_seconds") == 0.0,
+             f"{name}: scenario {sid} autoscale violates the SLO "
+             f"({auto.get('slo_violation_seconds')}s)")
+    _require(errors, auto.get("cost_usd", 1e18) < fleet.get("cost_usd", 0),
+             f"{name}: scenario {sid} autoscale (${auto.get('cost_usd')}) not "
+             f"strictly cheaper than static-peak fleet (${fleet.get('cost_usd')})")
+    _require(
+        errors,
+        auto.get("idle_headroom_tokens", 1e18)
+        < fleet.get("idle_headroom_tokens", 0),
+        f"{name}: scenario {sid} autoscale shed no idle headroom",
+    )
 
 
 def check_kernel_bench(errors, name, data):
