@@ -1,0 +1,321 @@
+#!/usr/bin/env python
+"""Simulator-core sweep bench: vectorized vs scalar-oracle, bit-exact.
+
+The ISSUE-9 tentpole: the simulator hot path (trace generation, next-
+revocation queries, per-hour billing, the full policy simulator) moved
+from per-market-per-hour Python loops to numpy over markets × hours. This
+bench runs a thousand-market, year-long (8760 h), multi-seed sweep through
+BOTH paths, asserts the vectorized results equal the retained scalar
+references BIT-FOR-BIT, asserts the wall-clock speedup floor, and writes
+``BENCH_sim.json`` (wall seconds + markets×hours/sec per stage) so
+``tools/check_bench.py`` can re-assert the committed floor in CI.
+
+Stages (each timed separately; the floor is asserted on the totals):
+
+* ``trace_generation`` — ``generate_markets`` vs ``generate_markets_scalar``
+  (same ``default_rng`` draw order; ``np.array_equal`` on prices),
+* ``next_revocation`` — suffix-scan table build + O(1) lookups vs the
+  scalar per-query suffix scan, on a deterministic query set,
+* ``billing`` — ``bill_session`` with a :class:`PriceTable` vs the scalar
+  per-hour-cell biller, one year-long session per market (exact
+  ``Breakdown`` dict equality),
+* ``simulate`` — ``Simulator(engine="vectorized")`` vs
+  ``engine="reference")`` over a mixed siwoft/checkpoint job set, sharing
+  precomputed features so only the engine difference is timed.
+
+Usage:
+    python benchmarks/sim_bench.py            # full sweep (committed run)
+    python benchmarks/sim_bench.py --quick    # CI smoke (writes quick:true)
+    python benchmarks/sim_bench.py --profile  # cProfile the vectorized pass
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.accounting import Breakdown, PriceTable, Session, bill_session
+from repro.core.market import (
+    generate_markets,
+    generate_markets_scalar,
+    next_revocation_scalar,
+    next_revocation_table,
+    split_history_future,
+)
+from repro.core.policies import CheckpointPolicy, Job, SiwoftPolicy
+from repro.core.provisioner import MarketFeatures
+from repro.core.simulator import Simulator
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
+
+# 42 regions × 4 zones × 6 menu shapes = 1008 markets — the thousand-market
+# scale the CloudSim-Plus-style generative sweeps need; a year of hours.
+FULL = dict(
+    regions=tuple(f"r{i:02d}" for i in range(42)),
+    n_hours=8760,
+    seeds=(0, 1),
+    queries=200_000,
+    n_jobs=24,
+    speedup_floor=10.0,
+)
+QUICK = dict(
+    regions=None,  # the default 6-region menu (144 markets)
+    n_hours=1464,
+    seeds=(0,),
+    queries=20_000,
+    n_jobs=8,
+    speedup_floor=2.0,
+)
+
+
+def _gen_kwargs(cfg, seed):
+    kw = dict(seed=seed, n_hours=cfg["n_hours"])
+    if cfg["regions"] is not None:
+        kw["regions"] = cfg["regions"]
+    return kw
+
+
+def _stage(scalar_s, vector_s, exact, **extra):
+    rep = {
+        "scalar_seconds": round(scalar_s, 4),
+        "vectorized_seconds": round(vector_s, 4),
+        "speedup": round(scalar_s / max(vector_s, 1e-9), 2),
+        **extra,
+    }
+    return rep, exact
+
+
+def stage_trace_generation(cfg):
+    t_s = t_v = 0.0
+    exact = True
+    cells = 0
+    market_sets = []
+    for seed in cfg["seeds"]:
+        t0 = time.perf_counter()
+        ms_s = generate_markets_scalar(**_gen_kwargs(cfg, seed))
+        t_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ms_v = generate_markets(**_gen_kwargs(cfg, seed))
+        t_v += time.perf_counter() - t0
+        exact = exact and np.array_equal(ms_s.prices, ms_v.prices)
+        cells += ms_v.prices.size
+        market_sets.append(ms_v)
+    rep, exact = _stage(
+        t_s, t_v, exact,
+        markets_hours_per_sec_scalar=round(cells / max(t_s, 1e-9)),
+        markets_hours_per_sec_vectorized=round(cells / max(t_v, 1e-9)),
+    )
+    return rep, exact, market_sets
+
+
+def stage_next_revocation(cfg, market_sets):
+    t_s = t_v = 0.0
+    exact = True
+    n_queries = 0
+    for ms in market_sets:
+        rev = ms.revocation_matrix()
+        n, n_hours = rev.shape
+        # deterministic query set touching every market and the whole range
+        # (incl. past-the-end, which must answer None on both paths)
+        q = cfg["queries"]
+        q_m = [(7 * i) % n for i in range(q)]
+        q_h = [(13 * i) % (n_hours + 2) for i in range(q)]
+        t0 = time.perf_counter()
+        got_s = [next_revocation_scalar(rev[m], h) for m, h in zip(q_m, q_h)]
+        t_s += time.perf_counter() - t0
+        qm, qh = np.asarray(q_m), np.asarray(q_h)
+        t0 = time.perf_counter()
+        table = next_revocation_table(rev)
+        # the sweep-shaped access pattern: the whole query batch in one
+        # gather (past-the-end queries answer -1/None on both paths)
+        ans = np.where(qh >= n_hours, -1, table[qm, np.minimum(qh, n_hours - 1)])
+        t_v += time.perf_counter() - t0
+        got_v = [None if a < 0 else int(a) for a in ans]  # untimed unpack
+        exact = exact and got_s == got_v
+        n_queries += q
+    rep, exact = _stage(t_s, t_v, exact, queries=n_queries)
+    return rep, exact
+
+
+def _year_long_sessions(fut):
+    """One session per market spanning (almost) the whole future window,
+    with a fractional start so partial billing cells are exercised."""
+    dur = fut.n_hours - 0.5
+    return [
+        Session(m.market_id, 0.25, intervals=[("execution", dur)])
+        for m in fut.markets
+    ]
+
+
+def stage_billing(cfg, market_sets):
+    t_s = t_v = 0.0
+    exact = True
+    cells = 0
+    for ms in market_sets:
+        _, fut = split_history_future(ms, ms.n_hours // 2)
+        prices, n_last = fut.prices, fut.n_hours - 1
+        closure = lambda m, h: float(prices[m, min(int(h), n_last)])  # noqa: E731
+        table = PriceTable(fut.prices)
+        bd_s, bd_v = Breakdown(), Breakdown()
+        t0 = time.perf_counter()
+        for s in _year_long_sessions(fut):
+            bill_session(s, closure, bd_s)  # callable -> scalar biller
+        t_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for s in _year_long_sessions(fut):
+            bill_session(s, table, bd_v)  # PriceTable -> vectorized biller
+        t_v += time.perf_counter() - t0
+        exact = exact and (
+            bd_s.time == bd_v.time
+            and bd_s.cost == bd_v.cost
+            and bd_s.leg_cost == bd_v.leg_cost
+            and bd_s.sessions == bd_v.sessions
+        )
+        cells += len(fut.markets) * fut.n_hours
+    rep, exact = _stage(
+        t_s, t_v, exact,
+        cells=cells,
+        markets_hours_per_sec_scalar=round(cells / max(t_s, 1e-9)),
+        markets_hours_per_sec_vectorized=round(cells / max(t_v, 1e-9)),
+    )
+    return rep, exact
+
+
+def _job_set(n_jobs):
+    lengths = (60.0, 140.0, 260.0, 380.0)
+    mems = (16.0, 30.0, 64.0, 120.0)
+    return [
+        Job(
+            length_hours=lengths[i % len(lengths)],
+            memory_gb=mems[i % len(mems)],
+            job_id=i,
+        )
+        for i in range(n_jobs)
+    ]
+
+
+def stage_simulate(cfg, market_sets):
+    """Full-policy runs on the first seed's markets. Features (the O(n²)
+    correlation matrix) are shared across engines so the timing isolates
+    the engine difference: next-revocation tables, PriceTable billing,
+    suitable-set memoization."""
+    ms = market_sets[0]
+    hist, fut = split_history_future(ms, ms.n_hours // 2)
+    feats = MarketFeatures.from_history(hist)
+    jobs = _job_set(cfg["n_jobs"])
+
+    def run(engine):
+        sim = Simulator(hist, fut, seed=0, engine=engine, feats=feats)
+        out = Breakdown()
+        out.add(sim.run_jobs(jobs, SiwoftPolicy()))
+        out.add(sim.run_jobs(jobs, CheckpointPolicy(), n_revocations=2))
+        return out
+
+    t0 = time.perf_counter()
+    bd_s = run("reference")
+    t_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bd_v = run("vectorized")
+    t_v = time.perf_counter() - t0
+    exact = (
+        bd_s.time == bd_v.time
+        and bd_s.cost == bd_v.cost
+        and bd_s.leg_cost == bd_v.leg_cost
+        and bd_s.revocations == bd_v.revocations
+        and bd_s.sessions == bd_v.sessions
+    )
+    rep, exact = _stage(t_s, t_v, exact, jobs=len(jobs) * 2)
+    return rep, exact
+
+
+def _progress(name, rep):
+    print(
+        f"  {name}: scalar {rep['scalar_seconds']}s, "
+        f"vectorized {rep['vectorized_seconds']}s ({rep['speedup']}×)"
+    )
+
+
+def run_bench(cfg, quick: bool) -> dict:
+    stages = {}
+    exact = {}
+    stages["trace_generation"], exact["trace_bitexact"], market_sets = (
+        stage_trace_generation(cfg)
+    )
+    _progress("trace_generation", stages["trace_generation"])
+    stages["next_revocation"], exact["next_revocation_equal"] = (
+        stage_next_revocation(cfg, market_sets)
+    )
+    _progress("next_revocation", stages["next_revocation"])
+    stages["billing"], exact["billing_bitexact"] = stage_billing(cfg, market_sets)
+    _progress("billing", stages["billing"])
+    stages["simulate"], exact["simulate_bitexact"] = stage_simulate(cfg, market_sets)
+    _progress("simulate", stages["simulate"])
+
+    scalar_total = sum(s["scalar_seconds"] for s in stages.values())
+    vector_total = sum(s["vectorized_seconds"] for s in stages.values())
+    n_markets = len(market_sets[0].markets)
+    payload = {
+        "bench": "sim",
+        "quick": quick,
+        "markets": n_markets,
+        "hours": cfg["n_hours"],
+        "seeds": list(cfg["seeds"]),
+        "speedup_floor": cfg["speedup_floor"],
+        "stages": stages,
+        "total": {
+            "scalar_seconds": round(scalar_total, 4),
+            "vectorized_seconds": round(vector_total, 4),
+            "speedup": round(scalar_total / max(vector_total, 1e-9), 2),
+        },
+        "exact": exact,
+    }
+
+    # the two acceptance gates, asserted AT MEASUREMENT TIME (check_bench
+    # re-asserts the committed numbers on every CI run)
+    assert all(exact.values()), f"vectorized path diverged from oracle: {exact}"
+    floor = cfg["speedup_floor"]
+    assert payload["total"]["speedup"] >= floor, (
+        f"vectorized core only {payload['total']['speedup']}× faster than the "
+        f"scalar oracle (floor {floor}×)"
+    )
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI smoke (144 markets, 61 days, 1 seed)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile the vectorized sweep and print hot spots")
+    args = ap.parse_args()
+    cfg = QUICK if args.quick else FULL
+
+    if args.profile:
+        import cProfile
+        import pstats
+
+        prof = cProfile.Profile()
+        prof.enable()
+        payload = run_bench(cfg, quick=args.quick)
+        prof.disable()
+        pstats.Stats(prof).sort_stats("cumulative").print_stats(15)
+    else:
+        payload = run_bench(cfg, quick=args.quick)
+
+    BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
+    total = payload["total"]
+    print(
+        f"sim_bench: {payload['markets']} markets × {payload['hours']} h × "
+        f"{len(payload['seeds'])} seed(s): scalar {total['scalar_seconds']}s, "
+        f"vectorized {total['vectorized_seconds']}s ({total['speedup']}×, "
+        f"floor {payload['speedup_floor']}×); all stages bit-exact"
+    )
+    print(f"wrote {BENCH_JSON}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

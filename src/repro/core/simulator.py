@@ -27,9 +27,9 @@ from typing import List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core import provisioner as alg
-from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.accounting import Breakdown, PriceTable, Session, bill_session
 from repro.core.allocation import Allocation
-from repro.core.market import MarketSet
+from repro.core.market import MarketSet, next_revocation_scalar, next_revocation_table
 from repro.core.policies import (
     CheckpointPolicy,
     Job,
@@ -50,20 +50,72 @@ class Simulator:
         future: MarketSet,
         overheads: OverheadModel = OverheadModel(),
         seed: int = 0,
+        engine: str = "vectorized",
+        feats: Optional[alg.MarketFeatures] = None,
     ):
+        """``engine="vectorized"`` (default) routes billing through a
+        :class:`PriceTable`, answers next-revocation queries from a
+        precomputed suffix-scan table, and memoizes suitable sets per job
+        footprint. ``engine="reference"`` keeps the original scalar code
+        paths end-to-end — the oracle ``benchmarks/sim_bench.py`` asserts
+        bit-exact breakdown equality against. ``feats`` optionally injects
+        precomputed :class:`MarketFeatures` (so benchmark harnesses can
+        share the O(markets²) correlation matrix across engines)."""
+        assert engine in ("vectorized", "reference"), engine
         self.history = history
         self.future = future
         self.ov = overheads
         self.seed = seed
-        self.feats = alg.MarketFeatures.from_history(history)
+        self.engine = engine
+        self.feats = (
+            alg.MarketFeatures.from_history(history) if feats is None else feats
+        )
         self._rev_matrix = future.revocation_matrix()
+        self._next_rev_table: Optional[np.ndarray] = None
+        # suitable-set memos: the FT baselines recompute the identical
+        # candidate list on every one of up to MAX_ATTEMPTS attempts; the
+        # returned lists are never mutated by callers, so sharing is safe
+        self._servers_cache: dict = {}
+        self._allocs_cache: dict = {}
+        if engine == "vectorized":
+            self._price = PriceTable(future.prices)
+        else:
+            prices, n_last = future.prices, future.n_hours - 1
+            self._price = lambda market_id, hour: float(
+                prices[market_id, min(int(hour), n_last)]
+            )
 
     # ------------------------------------------------------------------
     # helpers
     # ------------------------------------------------------------------
-    def _price(self, market_id: int, hour: float) -> float:
-        h = min(int(hour), self.future.n_hours - 1)
-        return float(self.future.prices[market_id, h])
+    def _const_price(self, price: float):
+        """Flat $/h price source (on-demand): a PriceTable on the vectorized
+        engine so ``bill_session`` takes its batched path, the equivalent
+        legacy closure on the reference engine."""
+        if self.engine == "vectorized":
+            return PriceTable.constant(price)
+        return lambda m, h: price
+
+    def _suitable_servers(self, job: Job) -> List[int]:
+        if self.engine == "reference":
+            return alg.find_suitable_servers(job, self.feats)
+        key = (job.memory_gb, job.length_hours)
+        out = self._servers_cache.get(key)
+        if out is None:
+            out = alg.find_suitable_servers(job, self.feats)
+            self._servers_cache[key] = out
+        return out
+
+    def _suitable_allocations(self, job: Job, policy: SiwoftPolicy):
+        if self.engine == "reference":
+            return alg.find_suitable_allocations(job, self.feats, policy)
+        # frozen-dataclass policies hash by value, so the key is stable
+        key = (job.memory_gb, job.length_hours, policy)
+        out = self._allocs_cache.get(key)
+        if out is None:
+            out = alg.find_suitable_allocations(job, self.feats, policy)
+            self._allocs_cache[key] = out
+        return out
 
     def _throughput(self, market_id: int) -> float:
         """Relative work rate of the market's shape (1-device ≡ 1.0)."""
@@ -93,7 +145,7 @@ class Simulator:
         restricts candidates to one instance-shape class (replication:
         replicas must be interchangeable)."""
         hour = min(int(wall), self.future.n_hours - 1)
-        suitable = alg.find_suitable_servers(job, self.feats)
+        suitable = self._suitable_servers(job)
         if within is not None:
             suitable = [i for i in suitable if i in within] or suitable
         cands = [i for i in suitable if i not in exclude]
@@ -107,13 +159,24 @@ class Simulator:
         return int(cands[rng.integers(len(cands))])
 
     def _next_trace_revocation(self, market_id: int, wall: float) -> Optional[float]:
-        """First revocation hour ≥ wall in the future window (None if none)."""
+        """First revocation hour ≥ wall in the future window (None if none).
+
+        Vectorized engine: O(1) lookup in the lazily-built suffix-scan
+        table. Reference engine: the scalar single-pass suffix scan (which
+        also fixes the historical double scan — argmax THEN a separate
+        ``.any()`` over the same suffix)."""
         h0 = int(math.ceil(wall))
-        rev = self._rev_matrix[market_id, h0:]
-        idx = np.argmax(rev)
-        if not rev.any():
+        if self.engine == "reference":
+            idx = next_revocation_scalar(self._rev_matrix[market_id], h0)
+            return None if idx is None else float(idx)
+        if self._next_rev_table is None:
+            self._next_rev_table = next_revocation_table(self._rev_matrix)
+        if h0 < 0:
+            h0 = 0
+        if h0 >= self._next_rev_table.shape[1]:
             return None
-        return float(h0 + idx)
+        idx = int(self._next_rev_table[market_id, h0])
+        return None if idx < 0 else float(idx)
 
     def _next_allocation_revocation(
         self, alloc: Allocation, wall: float
@@ -184,7 +247,7 @@ class Simulator:
         restriction step then excludes markets correlated with the revoked
         leg or with any surviving leg."""
         bd = Breakdown()
-        suitable = alg.find_suitable_allocations(job, self.feats, policy)  # step 2
+        suitable = self._suitable_allocations(job, policy)  # step 2
         if not suitable:
             raise ValueError(
                 f"job {job.job_id}: {job.memory_gb} GB fits no allocation of "
@@ -483,5 +546,5 @@ class Simulator:
         session = Session(-1, start_wall)
         session.add("startup", self.ov.startup_hours)
         session.add("execution", job.wall_hours_on(thr))
-        bill_session(session, lambda m, h: price, bd)
+        bill_session(session, self._const_price(price), bd)
         return bd

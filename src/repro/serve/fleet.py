@@ -42,9 +42,9 @@ from typing import Callable, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core import provisioner as alg
-from repro.core.accounting import Breakdown, Session, bill_session
+from repro.core.accounting import Breakdown, PriceTable, Session, bill_session
 from repro.core.allocation import Allocation
-from repro.core.market import MarketSet, shape_throughput
+from repro.core.market import MarketSet, next_revocation_table, shape_throughput
 from repro.core.policies import Job, OverheadModel, SiwoftPolicy
 from repro.core.units import SECONDS_PER_HOUR
 from repro.serve.autoscale import AutoscalePolicy, AutoScaler
@@ -441,6 +441,14 @@ class FleetSimulator:
         self.autoscale = autoscale if autoscale is not None else AutoscalePolicy()
         self.tracker = tracker
         self._rev = future.revocation_matrix()
+        # vectorized trace indexes (one O(markets × hours) pass each):
+        # next-revocation suffix table for O(1) "when does this leg die?"
+        # queries, and an hour -> revoking-market-set map so the hourly
+        # loops touch Python only on event hours
+        self._next_rev = next_revocation_table(self._rev)
+        self._rev_hours: dict = {}
+        for m, h in zip(*np.nonzero(self._rev)):
+            self._rev_hours.setdefault(int(h), set()).add(int(m))
         # with a tracker wired in, provisioning itself consumes measured
         # rates (ranking, sizing bars, Replica.tokens_per_sec); without
         # one the analytic model stands and the hook stays None so the
@@ -515,11 +523,14 @@ class FleetSimulator:
 
     def _next_revocation_hour(self, alloc: Allocation, wall: float) -> Optional[int]:
         h0 = int(math.ceil(wall))
+        if h0 < 0:
+            h0 = 0
+        if h0 >= self._next_rev.shape[1]:
+            return None
         best = None
         for m in alloc.markets:
-            tail = self._rev[m, h0:]
-            if tail.any():
-                h = h0 + int(np.argmax(tail))
+            h = int(self._next_rev[m, h0])
+            if h >= 0:
                 best = h if best is None else min(best, h)
         return best
 
@@ -535,7 +546,7 @@ class FleetSimulator:
             return self._run_auto(hours, rate_tokens_per_sec)
         wl, policy, ov = self.workload, self.policy, self.ov
         bd = Breakdown()
-        price = self.future.spot_price
+        price = PriceTable(self.future.prices)
         if self.mode == "fleet":
             plan = provision_fleet(
                 wl, self.feats, policy, rate_correction=self._corr
@@ -733,7 +744,7 @@ class FleetSimulator:
         """
         wl, policy, ov = self.workload, self.policy, self.ov
         bd = Breakdown()
-        price = self.future.spot_price
+        price = PriceTable(self.future.prices)
         scaler = AutoScaler(
             self.autoscale,
             capacity_headroom=policy.capacity_headroom,
@@ -844,8 +855,14 @@ class FleetSimulator:
         scale_up(0.0, target0, self._revoking_at(0))
         scaler.record(0.0, "init")  # arms the cooldown, not a scale event
 
+        # offered-rate lookups batched once: the hourly loop reads a plain
+        # float array instead of converting a sequence element per hour
+        offered = np.asarray(rate_tokens_per_sec, dtype=float)
         n_hours = int(hours)
-        for h in range(n_hours):
+        # sanctioned hourly DECISION loop: the scaler's verdict is
+        # genuinely sequential (cooldowns, in-flight floor); the per-hour
+        # trace lookups it consumes are precomputed arrays/maps
+        for h in range(n_hours):  # repro-lint: disable=V001
             now = float(h)
             # 1) revocations landing this hour (same trace semantics as
             # the static loop: market m revokes at hour h)
@@ -858,9 +875,9 @@ class FleetSimulator:
                     revocations += 1
                     revoked.update(hit)
             # 2) the scaler's verdict for this interval
-            offered_now = float(
-                rate_tokens_per_sec[min(h, len(rate_tokens_per_sec) - 1)]
-            ) if len(rate_tokens_per_sec) else 0.0
+            offered_now = (
+                float(offered[min(h, offered.size - 1)]) if offered.size else 0.0
+            )
             fc = scaler.forecast(rate_tokens_per_sec, h)
             decision = scaler.decide(
                 now,
@@ -927,10 +944,10 @@ class FleetSimulator:
     def _revoking_at(self, hour: int) -> Set[int]:
         """Markets whose spot request is revoked at trace hour ``hour`` —
         excluded from same-hour provisioning (a replica placed on one
-        would die before it finished starting)."""
-        if hour < 0 or hour >= self._rev.shape[1]:
-            return set()
-        return {int(m) for m in np.nonzero(self._rev[:, hour])[0]}
+        would die before it finished starting). O(1) map lookup; quiet
+        hours (the vast majority) return the empty set without touching
+        the revocation matrix."""
+        return self._rev_hours.get(int(hour), set())
 
 
 def on_demand_reference(
@@ -966,11 +983,12 @@ def on_demand_reference(
     k = max(int(math.ceil(target / max(rate, 1e-9))), 1)
     bd = Breakdown()
     od_price = float(feats.on_demand[best])
+    od_table = PriceTable.constant(od_price)
     for _ in range(k):
         s = Session(best, 0.0)
         s.add("startup", overheads.startup_hours)
         s.add("execution", max(hours - overheads.startup_hours, 0.0))
-        bill_session(s, lambda m, h: od_price, bd)
+        bill_session(s, od_table, bd)
     cap_events = [
         CapacityEvent(0.0, 0.0),
         CapacityEvent(overheads.startup_hours, k * rate),

@@ -51,6 +51,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.accounting import Breakdown
 from repro.core.units import SECONDS_PER_HOUR
 
@@ -266,6 +268,9 @@ def route_trace(
     events = sorted(capacity_events, key=lambda e: e.at_hours)
     assert events and events[0].at_hours <= 0.0, "capacity at t=0 required"
     end = float(hours if hours is not None else len(rate_tokens_per_sec))
+    # hoist the per-interval element conversions out of the walk: one
+    # float array instead of a Sequence __getitem__ + float() per interval
+    rate = np.asarray(rate_tokens_per_sec, dtype=float)
     # all boundaries: hour marks + event times
     marks = sorted(
         {float(h) for h in range(int(end) + 1)}
@@ -280,10 +285,10 @@ def route_trace(
             continue
         while cap_i + 1 < len(events) and events[cap_i + 1].at_hours <= t0 + 1e-12:
             cap_i += 1
-        rate_idx = min(int(t0), len(rate_tokens_per_sec) - 1)
+        rate_idx = min(int(t0), rate.size - 1)
         q, s = drain_interval(
             q,
-            float(rate_tokens_per_sec[rate_idx]),
+            float(rate[rate_idx]),
             events[cap_i].tokens_per_sec,
             (t1 - t0) * SECONDS_PER_HOUR,
             max_delay_seconds=max_delay_seconds,
@@ -307,6 +312,7 @@ def idle_headroom_tokens(
     events = sorted(capacity_events, key=lambda e: e.at_hours)
     assert events and events[0].at_hours <= 0.0, "capacity at t=0 required"
     end = float(hours if hours is not None else len(rate_tokens_per_sec))
+    rate = np.asarray(rate_tokens_per_sec, dtype=float)
     marks = sorted(
         {float(h) for h in range(int(end) + 1)}
         | {e.at_hours for e in events if 0.0 < e.at_hours < end}
@@ -319,10 +325,8 @@ def idle_headroom_tokens(
             continue
         while cap_i + 1 < len(events) and events[cap_i + 1].at_hours <= t0 + 1e-12:
             cap_i += 1
-        rate_idx = min(int(t0), len(rate_tokens_per_sec) - 1)
-        headroom = events[cap_i].tokens_per_sec - float(
-            rate_tokens_per_sec[rate_idx]
-        )
+        rate_idx = min(int(t0), rate.size - 1)
+        headroom = events[cap_i].tokens_per_sec - float(rate[rate_idx])
         if headroom > 0.0:
             idle += headroom * (t1 - t0) * SECONDS_PER_HOUR
     return idle

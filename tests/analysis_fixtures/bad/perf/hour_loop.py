@@ -1,0 +1,29 @@
+"""V001: per-hour Python loops in a vectorized-core hot module (4 hits)."""
+import numpy as np
+
+
+def bill_hour_by_hour(prices, n_hours):
+    total = 0.0
+    for h in range(n_hours):                   # V001: range over an hour count
+        total += float(prices[0, min(h, prices.shape[1] - 1)])
+    return total
+
+
+def scan_revocations(rev):
+    # no 'hour' identifier in the range bound; fires via the
+    # trace-array-subscript signature (rev indexed by the loop variable)
+    hits = []
+    for h in range(rev.shape[1]):              # V001
+        if rev[0, h]:
+            hits.append(h)
+    return hits
+
+
+def ar1_per_market(eps, phi):
+    noise = np.empty_like(eps)
+    for i in range(eps.shape[0]):              # V001: eps[i, h] indexed by i
+        x = 0.0
+        for h in range(eps.shape[1]):          # V001: eps[i, h] indexed by h
+            x = phi * x + eps[i, h]
+            noise[i, h] = x
+    return noise

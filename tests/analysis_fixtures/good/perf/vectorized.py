@@ -1,0 +1,35 @@
+"""Clean under V001: vectorized hour-axis work + one sanctioned loop."""
+import numpy as np
+
+
+def next_revocation_table(rev):
+    n, n_hours = rev.shape
+    hours = np.arange(n_hours, dtype=np.int32)
+    cand = np.where(rev, hours, np.int32(n_hours))
+    np.minimum.accumulate(cand[:, ::-1], axis=1, out=cand[:, ::-1])
+    cand[cand == n_hours] = -1
+    return cand
+
+
+def bill_interval(prices, first_hour, steps):
+    idx = np.minimum(first_hour + np.arange(steps.size), prices.shape[1] - 1)
+    return float(np.add.reduce(steps * prices[0, idx]))
+
+
+def hourly_decisions(offered, n_hours):
+    # sequential decision recurrence: each hour consumes the previous
+    # hour's choice, so the loop is sanctioned and suppressed by name
+    out = []
+    state = 0.0
+    for h in range(n_hours):  # decision recurrence  # repro-lint: disable=V001
+        state = 0.5 * state + float(offered[min(h, offered.size - 1)])
+        out.append(state)
+    return out
+
+
+def jobs_not_hours(batch):
+    # loops over jobs (not the hour axis, no trace subscripts) are fine
+    total = 0.0
+    for i in range(len(batch)):
+        total += batch[i]
+    return total

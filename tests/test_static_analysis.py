@@ -18,6 +18,7 @@ from tools.analysis.core import (  # noqa: E402
 )
 from tools.analysis.determinism import DeterminismPass  # noqa: E402
 from tools.analysis.pallas import PallasPass  # noqa: E402
+from tools.analysis.perf import PerfPass  # noqa: E402
 from tools.analysis.shardspec import ShardSpecPass  # noqa: E402
 from tools.analysis.units import UnitsPass  # noqa: E402
 
@@ -182,6 +183,62 @@ def test_shardspec_real_tree_declares_all_used_axes():
         (REPO / "src" / "repro" / "launch").glob("*.py")
     )
     assert run_pass(ShardSpecPass(), files, REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# perf (V001)
+# ---------------------------------------------------------------------------
+
+def test_perf_bad_fixture_fires_v001():
+    diags = run_pass(PerfPass(), [FIX / "bad" / "perf" / "hour_loop.py"])
+    assert rules_of(diags) == {"V001"}, diags
+    # range-over-hour-count, rev-subscript, and both oracle-style loops
+    assert len(diags) == 4, diags
+
+
+def test_perf_good_fixture_accepted():
+    # via run_analysis so the fixture's sanctioned-loop inline disable
+    # applies, same as the real gate
+    diags = run_analysis(paths=[FIX / "good" / "perf"], root=REPO,
+                         only_passes=["perf"])
+    assert diags == []
+
+
+def test_perf_scope_is_the_six_hot_modules():
+    p = PerfPass()
+    for mod in (
+        "src/repro/core/market.py",
+        "src/repro/core/simulator.py",
+        "src/repro/core/accounting.py",
+        "src/repro/core/provisioner.py",
+        "src/repro/serve/fleet.py",
+        "src/repro/serve/router.py",
+    ):
+        assert p.applies_to(Path(mod)), mod
+    # loops elsewhere (orchestrator bookkeeping, benches, tests) are free
+    assert not p.applies_to(Path("src/repro/core/orchestrator.py"))
+    assert not p.applies_to(Path("benchmarks/sim_bench.py"))
+    assert not p.applies_to(Path("src/repro/serve/engine.py"))
+
+
+def test_perf_suppressed_oracles_keep_real_tree_clean():
+    """The scalar oracles and the fleet's decision loop are hour loops by
+    design — every one must carry an inline disable, leaving the hot
+    modules free of unsuppressed V001s."""
+    hot = [
+        REPO / "src" / "repro" / "core" / "market.py",
+        REPO / "src" / "repro" / "core" / "simulator.py",
+        REPO / "src" / "repro" / "core" / "accounting.py",
+        REPO / "src" / "repro" / "core" / "provisioner.py",
+        REPO / "src" / "repro" / "serve" / "fleet.py",
+        REPO / "src" / "repro" / "serve" / "router.py",
+    ]
+    assert run_analysis(paths=hot, root=REPO, only_passes=["perf"]) == []
+    # ...and the oracles DO contain sanctioned loops the pass would flag
+    raw = run_pass(PerfPass(), [REPO / "src" / "repro" / "core" / "market.py"])
+    assert any(d.rule == "V001" for d in raw), (
+        "expected the scalar oracles in market.py to trip V001 pre-suppression"
+    )
 
 
 # ---------------------------------------------------------------------------

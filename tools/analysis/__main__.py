@@ -11,7 +11,7 @@ def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m tools.analysis",
         description="repro-lint: invariant-enforcing static analysis "
-        "(units, conservation, determinism, Pallas, sharding).",
+        "(units, conservation, determinism, Pallas, sharding, perf).",
     )
     parser.add_argument(
         "paths",

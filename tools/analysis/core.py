@@ -96,7 +96,7 @@ class SourceFile:
 
 
 class Pass:
-    """Base class for the five repro-lint passes."""
+    """Base class for the repro-lint passes."""
 
     name: str = ""
     rules: Dict[str, str] = {}
@@ -138,6 +138,7 @@ def all_passes() -> List[Pass]:
     from tools.analysis.conservation import ConservationPass
     from tools.analysis.determinism import DeterminismPass
     from tools.analysis.pallas import PallasPass
+    from tools.analysis.perf import PerfPass
     from tools.analysis.shardspec import ShardSpecPass
     from tools.analysis.units import UnitsPass
 
@@ -147,6 +148,7 @@ def all_passes() -> List[Pass]:
         DeterminismPass(),
         PallasPass(),
         ShardSpecPass(),
+        PerfPass(),
     ]
 
 

@@ -1,0 +1,136 @@
+"""Pass 6 — vectorized-core perf lint (V001).
+
+ISSUE 9 moved the simulator's hot path (trace generation, next-revocation
+queries, billing, fleet/router hour stepping) from per-market-per-hour
+Python loops to numpy over markets × hours — a ~10× end-to-end speedup
+pinned by ``BENCH_sim.json``. This pass keeps the hot modules from
+quietly regressing back to interpreter-bound iteration:
+
+* **V001** — a ``for ... in range(...)`` loop in a hot module that either
+  ranges over an hour count (an identifier containing ``hour`` appears in
+  the ``range`` arguments) or indexes a per-hour trace array
+  (``prices``/``rev``/``eps``/... subscripted by the loop variable in the
+  body). Hot modules are the six the vectorized core spans:
+  ``core/{market,simulator,accounting,provisioner}.py`` and
+  ``serve/{fleet,router}.py``.
+
+Sanctioned hour loops exist — the scalar oracles kept as bit-exactness
+references (``generate_markets_scalar``, ``_bill_session_scalar``, ...)
+and the fleet's per-hour DECISION loop (each hour consumes the previous
+hour's scaling choice, an inherently sequential recurrence). Those are
+suppressed inline with ``# repro-lint: disable=V001`` plus the reason, so
+every surviving diagnostic is an unreviewed hot-path loop.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+# the modules the ISSUE-9 vectorization spans; everything else (tests,
+# benches, the orchestrator's real-run bookkeeping) may loop freely
+_HOT_MODULES = {
+    ("core", "market.py"),
+    ("core", "simulator.py"),
+    ("core", "accounting.py"),
+    ("core", "provisioner.py"),
+    ("serve", "fleet.py"),
+    ("serve", "router.py"),
+}
+
+# per-hour trace arrays of the simulator core: subscripting one of these
+# with the loop variable is the signature of a scalar hot loop
+_TRACE_NAMES = {
+    "prices", "rev", "_rev", "rev_matrix", "eps", "noise", "spikes",
+    "spike_mult", "rate_tokens_per_sec", "trace",
+}
+
+
+def _identifiers(node: ast.AST) -> List[str]:
+    out: List[str] = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.append(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.append(sub.attr)
+    return out
+
+
+def _subscript_base(node: ast.Subscript) -> Optional[str]:
+    """``prices[...]`` / ``self._rev[...]`` -> the trailing identifier."""
+    v = node.value
+    if isinstance(v, ast.Name):
+        return v.id
+    if isinstance(v, ast.Attribute):
+        return v.attr
+    return None
+
+
+class PerfPass(Pass):
+    name = "perf"
+    rules = {
+        "V001": "per-hour Python loop in a vectorized-core hot module "
+                "(range over an hour count, or a trace array indexed by "
+                "the loop variable)",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if "analysis_fixtures" in parts:
+            return "perf" in parts
+        return (
+            len(parts) >= 4
+            and parts[:2] == ("src", "repro")
+            and (parts[2], parts[3]) in _HOT_MODULES
+        )
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for f in files:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.For):
+                    d = self._check_loop(f, node)
+                    if d is not None:
+                        diags.append(d)
+        return diags
+
+    def _check_loop(self, f: SourceFile, node: ast.For) -> Optional[Diagnostic]:
+        it = node.iter
+        if not (
+            isinstance(it, ast.Call)
+            and isinstance(it.func, ast.Name)
+            and it.func.id == "range"
+        ):
+            return None
+        # signature 1: the range bound is an hour count
+        if any("hour" in ident.lower() for arg in it.args
+               for ident in _identifiers(arg)):
+            return self.diag(
+                f, node, "V001",
+                "Python loop over an hour range in a vectorized-core hot "
+                "module",
+                "vectorize over the hour axis (suffix scans, add.accumulate, "
+                "PriceTable gathers); if the loop is a sanctioned scalar "
+                "oracle or a sequential decision recurrence, suppress with "
+                "the reason named",
+            )
+        # signature 2: the body subscripts a trace array with the loop var
+        if not isinstance(node.target, ast.Name):
+            return None
+        loop_var = node.target.id
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Subscript):
+                continue
+            base = _subscript_base(sub)
+            if base in _TRACE_NAMES and loop_var in _identifiers(sub.slice):
+                return self.diag(
+                    f, node, "V001",
+                    f"Python loop indexing trace array '{base}' per "
+                    f"iteration in a vectorized-core hot module",
+                    "gather the whole axis in one numpy indexing op; if "
+                    "scalar access is intentional (oracle/decision loop), "
+                    "suppress with the reason named",
+                )
+        return None

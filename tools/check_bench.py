@@ -214,6 +214,59 @@ def check_breakdowns(errors, name, data, path="", depth=0):
                 check_breakdowns(errors, name, item, f"{here}[{i}]", depth + 1)
 
 
+SIM_STAGES = {"trace_generation", "next_revocation", "billing", "simulate"}
+SIM_STAGE_KEYS = {"scalar_seconds", "vectorized_seconds", "speedup"}
+SIM_EXACT_FLAGS = {
+    "trace_bitexact", "next_revocation_equal", "billing_bitexact",
+    "simulate_bitexact",
+}
+SIM_SPEEDUP_FLOOR = 10.0  # ISSUE 9 acceptance: ≥10× on the committed sweep
+
+
+def check_sim(errors, name, data):
+    """``benchmarks/sim_bench.py`` output: the vectorized-core sweep.
+
+    Beyond the schema, re-assert the two acceptance gates on the COMMITTED
+    numbers: every bit-exactness flag is true, and the total speedup of
+    the full 1000-market year-long sweep clears the 10× floor. sim_bench
+    asserts both at measurement time; this gate catches a regressed or
+    hand-edited JSON landing in the tree."""
+    _require(errors, set(data) >= {"bench", "markets", "hours", "seeds",
+                                   "speedup_floor", "stages", "total", "exact"},
+             f"{name}: missing top-level keys")
+    _require(errors, data.get("bench") == "sim", f"{name}: bench != 'sim'")
+    check_not_quick(errors, name, data)
+    _require(errors, data.get("markets", 0) >= 1000,
+             f"{name}: committed sweep must cover >= 1000 markets "
+             f"(got {data.get('markets')})")
+    _require(errors, data.get("hours", 0) >= 8760,
+             f"{name}: committed sweep must cover >= 8760 hours "
+             f"(got {data.get('hours')})")
+    stages = data.get("stages", {})
+    _require(errors, set(stages) == SIM_STAGES,
+             f"{name}: stages {sorted(stages)} != {sorted(SIM_STAGES)}")
+    for stage, rep in stages.items():
+        missing = SIM_STAGE_KEYS - set(rep)
+        _require(errors, not missing,
+                 f"{name}: stages.{stage} missing {sorted(missing)}")
+    total = data.get("total", {})
+    missing = SIM_STAGE_KEYS - set(total)
+    _require(errors, not missing, f"{name}: total missing {sorted(missing)}")
+    _require(errors, data.get("speedup_floor") == SIM_SPEEDUP_FLOOR,
+             f"{name}: speedup_floor must be {SIM_SPEEDUP_FLOOR} "
+             f"(got {data.get('speedup_floor')!r})")
+    _require(errors, total.get("speedup", 0.0) >= SIM_SPEEDUP_FLOOR,
+             f"{name}: total.speedup {total.get('speedup')} below the "
+             f"{SIM_SPEEDUP_FLOOR}x floor")
+    exact = data.get("exact", {})
+    _require(errors, set(exact) == SIM_EXACT_FLAGS,
+             f"{name}: exact flags {sorted(exact)} != {sorted(SIM_EXACT_FLAGS)}")
+    for flag, val in exact.items():
+        _require(errors, val is True,
+                 f"{name}: exact.{flag} must be true (vectorized path must "
+                 f"match the scalar oracle bit-for-bit), got {val!r}")
+
+
 def check_generic(errors, name, data):
     _require(errors, isinstance(data, dict), f"{name}: top level must be an object")
     if isinstance(data, dict) and isinstance(data.get("scenarios"), list):
@@ -223,6 +276,7 @@ def check_generic(errors, name, data):
 CHECKERS = {
     "BENCH_orchestrator.json": check_orchestrator,
     "BENCH_serve.json": check_serve,
+    "BENCH_sim.json": check_sim,
 }
 
 

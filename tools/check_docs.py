@@ -23,6 +23,7 @@ REQUIRED = [
     "docs/serving.md",
     "docs/invariants.md",
     "docs/kernels.md",
+    "docs/simulator-perf.md",
 ]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
