@@ -207,7 +207,21 @@ def run_split_subprocess(quick: bool) -> dict:
     )
 
 
-def main(quick: bool = False, steps: int = 0) -> None:
+def main(quick: bool = False, steps: int = 0, trace: str = "") -> None:
+    if trace:
+        from repro.obs.export import write_jsonl
+        from repro.obs.recorder import recording
+
+        # NOTE: the 2-leg split scenario runs in a re-exec'd subprocess
+        # (8 forced host devices), so its events are not in this trace.
+        with recording() as rec:
+            _main(quick, steps)
+        print(f"# trace: {trace} ({write_jsonl(trace, rec.events)} events)")
+        return
+    _main(quick, steps)
+
+
+def _main(quick: bool = False, steps: int = 0) -> None:
     cfg = get_arch("qwen3-4b").reduced()
     model = build_model(cfg)
     ds = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
@@ -327,8 +341,11 @@ if __name__ == "__main__":
     ap.add_argument("--split-only", action="store_true",
                     help="internal: run just the 2-leg split scenario "
                          "(re-execed with 8 forced host devices)")
+    ap.add_argument("--trace", default="",
+                    help="record the structured event timeline to this JSONL "
+                         "path (validate with python -m repro.obs.replay)")
     args = ap.parse_args()
     if args.split_only:
         print("SPLIT_JSON " + json.dumps(split_scenario(quick=args.quick)))
     else:
-        main(quick=args.quick, steps=args.steps)
+        main(quick=args.quick, steps=args.steps, trace=args.trace)

@@ -284,7 +284,19 @@ def rep_json(rep):
     }
 
 
-def main(quick: bool = False, kernels: bool = False) -> None:
+def main(quick: bool = False, kernels: bool = False, trace: str = "") -> None:
+    if trace:
+        from repro.obs.export import write_jsonl
+        from repro.obs.recorder import recording
+
+        with recording() as rec:
+            _main(quick, kernels)
+        print(f"# trace: {trace} ({write_jsonl(trace, rec.events)} events)")
+        return
+    _main(quick, kernels)
+
+
+def _main(quick: bool = False, kernels: bool = False) -> None:
     from repro.core import generate_markets, split_history_future
 
     kb = kernel_bench(quick) if kernels else None
@@ -364,4 +376,7 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true", help="3-day smoke run")
     ap.add_argument("--kernels", action="store_true",
                     help="also run the paged-vs-dense decode microbench")
+    ap.add_argument("--trace", default="", dest="trace",
+                    help="record the structured event timeline to this JSONL "
+                         "path (validate with python -m repro.obs.replay)")
     main(**vars(ap.parse_args()))

@@ -101,6 +101,8 @@ from repro.core.policies import Job, OverheadModel, SiwoftPolicy
 from repro.core.units import BYTES_PER_GIB, SECONDS_PER_HOUR
 from repro.data import SyntheticLM
 from repro.dist.elastic import reshard_tree
+from repro.obs import events as obs_ev
+from repro.obs.recorder import current as obs_current
 from repro.dist.meshplan import (
     ElasticMeshManager,
     MeshPlan,
@@ -412,6 +414,17 @@ class SpotTrainingOrchestrator:
         price_of = PriceTable(self.future.prices)
         step = 0
         wall = 0.0  # trace wall-clock hours; advances at the shape's rate
+        rec = obs_current()
+        if rec.enabled:
+            rec.emit(
+                obs_ev.RunStart(
+                    t=wall,
+                    subsystem="orchestrator",
+                    label=self.mode,
+                    horizon_hours=float(self.future.n_hours),
+                )
+            )
+            rec.emit(obs_ev.price_trace(wall, self.future.prices))
         # real (not simulated) wall clock: measures actual segment speed for
         # the ThroughputTracker; never enters the deterministic trace ledger
         t0 = time.perf_counter()  # repro-lint: disable=D001
@@ -459,6 +472,14 @@ class SpotTrainingOrchestrator:
                 alg.allocation_throughput(alloc, feats), 1e-9
             )
 
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.Provision(
+                        t=wall,
+                        market_id=int(alloc.legs[0].market),
+                        legs=tuple(int(m) for m in alloc.markets),
+                    )
+                )
             session = Session(alloc.legs[0].market, wall, legs=alloc.markets)
             if carry_anchors:
                 # legs surviving the last split revocation carry their own
@@ -473,6 +494,12 @@ class SpotTrainingOrchestrator:
                         del carry_anchors[m]
                     else:
                         a, end = carry_anchors.pop(m)
+                        if rec.enabled:
+                            rec.emit(
+                                obs_ev.LegSettled(
+                                    t=wall, market_id=int(m), anchor=a, end_wall=end
+                                )
+                            )
                         settle_leg(bd, m, a, end, price_of)
             session.add("startup", self.ov.startup_hours)
 
@@ -504,10 +531,15 @@ class SpotTrainingOrchestrator:
                 if moved:
                     moved_total += moved
                     reshard_events += 1
-                    session.add(
-                        "reshard",
-                        self.ov.reshard_hours(moved, alloc.dcn_gbps),
-                    )
+                    reshard_h = self.ov.reshard_hours(moved, alloc.dcn_gbps)
+                    if rec.enabled:
+                        rec.emit(
+                            obs_ev.ReshardStart(
+                                t=wall, bytes_moved=int(moved), gbps=alloc.dcn_gbps
+                            )
+                        )
+                        rec.emit(obs_ev.ReshardDone(t=wall + reshard_h, hours=reshard_h))
+                    session.add("reshard", reshard_h)
             pending_repair, pending_repair_bytes = None, 0
 
             # live cross-mesh migration: the state's current layout differs
@@ -518,10 +550,19 @@ class SpotTrainingOrchestrator:
                         moved = reshard_bytes(state, live_shardings(state), state_sh)
                         moved_total += moved
                         reshard_events += 1
-                        session.add(
-                            "reshard",
-                            self.ov.reshard_hours(moved, m.interconnect_gbps),
-                        )
+                        reshard_h = self.ov.reshard_hours(moved, m.interconnect_gbps)
+                        if rec.enabled:
+                            rec.emit(
+                                obs_ev.ReshardStart(
+                                    t=wall,
+                                    bytes_moved=int(moved),
+                                    gbps=m.interconnect_gbps,
+                                )
+                            )
+                            rec.emit(
+                                obs_ev.ReshardDone(t=wall + reshard_h, hours=reshard_h)
+                            )
+                        session.add("reshard", reshard_h)
                     else:
                         # the checkpoint baseline has no live-handoff
                         # mechanism: crossing instances means a checkpoint
@@ -568,6 +609,8 @@ class SpotTrainingOrchestrator:
             except Revoked as r:
                 done = max(r.last_step - seg_start + 1, 0)
                 revs += 1
+                if rec.enabled:
+                    rec.emit(obs_ev.Revoke(t=wall, market_id=int(rev_market)))
                 revoked.add(rev_market)
                 session.add("re_execution", done / rate)
                 handoff = False  # true when live state survives in memory
@@ -645,6 +688,8 @@ class SpotTrainingOrchestrator:
                 )
                 session.leg_anchors = anchors
                 session.leg_releases = releases
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(wall, session))
             wall += bill_session(session, price_of, bd)
             if defer:
                 end = session.start_wall + session.used_hours
@@ -653,9 +698,21 @@ class SpotTrainingOrchestrator:
                         carry_anchors[m] = (a, end)
 
         for m, (a, end) in sorted(carry_anchors.items()):
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.LegSettled(t=wall, market_id=int(m), anchor=a, end_wall=end)
+                )
             settle_leg(bd, m, a, end, price_of)
         if self.ckpt is not None:
             self.ckpt.wait()
+        # the breakdown carries the run's own revocation count and simulated
+        # wall clock (report.wall_seconds stays the real perf-counter time),
+        # which is also what makes the replay oracle uniform across loops
+        bd.revocations = revs
+        bd.wall_time = wall
+        if rec.enabled:
+            rec.emit(obs_ev.breakdown_pin(wall, bd))
+            rec.emit(obs_ev.RunEnd(t=wall, wall_hours=wall))
         return OrchestratorReport(
             total_steps=useful + wasted,
             useful_steps=useful,

@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core import provisioner as alg
 from repro.core.accounting import Breakdown, PriceTable, Session, bill_session
+from repro.obs import events as obs_ev
+from repro.obs.recorder import current as obs_current
 from repro.core.allocation import Allocation
 from repro.core.market import MarketSet, next_revocation_scalar, next_revocation_table
 from repro.core.policies import (
@@ -210,6 +212,20 @@ class Simulator:
     ) -> Breakdown:
         from repro.core.portfolio import PortfolioPolicy
 
+        # Both engines run the SAME policy code below and bill bit-identical
+        # breakdowns, so with a recorder active they emit IDENTICAL event
+        # logs — a cross-engine pin tests/test_obs.py holds with ==.
+        rec = obs_current()
+        if rec.enabled:
+            rec.emit(
+                obs_ev.RunStart(
+                    t=start_wall,
+                    subsystem="simulator",
+                    label=type(policy).__name__,
+                    horizon_hours=float(self.future.n_hours),
+                )
+            )
+            rec.emit(obs_ev.price_trace(start_wall, self.future.prices))
         if isinstance(policy, PortfolioPolicy):
             bd = self._run_portfolio(job, policy, start_wall)
         elif isinstance(policy, SiwoftPolicy):
@@ -226,6 +242,9 @@ class Simulator:
             raise TypeError(policy)
         if bd.wall_time == 0.0:
             bd.wall_time = bd.total_time
+        if rec.enabled:
+            rec.emit(obs_ev.breakdown_pin(bd.wall_time, bd))
+            rec.emit(obs_ev.RunEnd(t=bd.wall_time, wall_hours=bd.wall_time))
         return bd
 
     def run_jobs(self, jobs: Sequence[Job], policy, n_revocations: int = 0) -> Breakdown:
@@ -246,6 +265,7 @@ class Simulator:
         of ONE leg interrupts the whole attempt (min-MTTR semantics); the
         restriction step then excludes markets correlated with the revoked
         leg or with any surviving leg."""
+        rec = obs_current()
         bd = Breakdown()
         suitable = self._suitable_allocations(job, policy)  # step 2
         if not suitable:
@@ -268,6 +288,14 @@ class Simulator:
             # ordered S — see alg.expected_cost_to_complete
             session = Session(a.legs[0].market, wall, legs=a.markets)
             session.add("startup", self.ov.startup_hours)              # provision (step 10)
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.Provision(
+                        t=wall,
+                        market_id=int(a.legs[0].market),
+                        legs=tuple(int(m) for m in a.markets),
+                    )
+                )
             resume_from = last_ckpt if policy.uses_checkpoints else 0.0
             if policy.uses_checkpoints and resume_from > 0:
                 session.add("recovery", self.ov.restore_hours(job.memory_gb))
@@ -314,6 +342,8 @@ class Simulator:
                 horizon = math.inf if t_rev is None else t_rev - compute_start
                 progress, _ = run_until(job.length_hours, horizon)
 
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(wall, session))
             wall_used = bill_session(session, self._price, bd)
             wall += wall_used
             if progress >= job.length_hours:                            # step 18
@@ -322,6 +352,8 @@ class Simulator:
             # Only ONE leg's market revoked; the whole attempt is
             # interrupted, but surviving legs stay eligible for repairs.
             bd.revocations += 1
+            if rec.enabled:
+                rec.emit(obs_ev.Revoke(t=wall, market_id=int(rev_market)))
             revoked.add(rev_market)
             surviving_legs = tuple(m for m in a.markets if m != rev_market)
             W = alg.find_low_correlation(
@@ -346,6 +378,7 @@ class Simulator:
         proactively diversified portfolio chain (core/portfolio.py)."""
         from repro.core.portfolio import portfolio_failover_order
 
+        rec = obs_current()
         bd = Breakdown()
         order = portfolio_failover_order(job, self.feats, policy)
         wall = start_wall
@@ -354,6 +387,10 @@ class Simulator:
             thr = self._throughput(s_m)
             session = Session(s_m, wall)
             session.add("startup", self.ov.startup_hours)
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.Provision(t=wall, market_id=int(s_m), legs=(int(s_m),))
+                )
             t_rev = self._next_trace_revocation(s_m, wall)
             compute_start = wall + session.used_hours
             horizon = math.inf if t_rev is None else t_rev - compute_start
@@ -365,10 +402,14 @@ class Simulator:
             if span - redo > 0:
                 session.add("execution", (span - redo) / thr)
             max_progress = max(max_progress, span)
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(wall, session))
             wall += bill_session(session, self._price, bd)
             if span >= job.length_hours:
                 return bd
             bd.revocations += 1
+            if rec.enabled:
+                rec.emit(obs_ev.Revoke(t=wall, market_id=int(s_m)))
             wall = max(wall, 0.0 if t_rev is None else t_rev)
         raise RuntimeError("portfolio: exhausted every market")
 
@@ -376,6 +417,7 @@ class Simulator:
     def _run_checkpoint(
         self, job: Job, policy: CheckpointPolicy, n_rev: int, start_wall: float
     ) -> Breakdown:
+        rec = obs_current()
         bd = Breakdown()
         rev_points = self._ft_revocation_points(job, n_rev, salt=1)
         wall = start_wall
@@ -392,6 +434,8 @@ class Simulator:
             thr = self._throughput(m)
             session = Session(m, wall)
             session.add("startup", self.ov.startup_hours)
+            if rec.enabled:
+                rec.emit(obs_ev.Provision(t=wall, market_id=int(m), legs=(int(m),)))
             if not first:
                 session.add("recovery", self.ov.restore_hours(job.memory_gb))
             first = False
@@ -422,11 +466,15 @@ class Simulator:
                     session.add("checkpointing", self.ov.ckpt_hours(job.memory_gb))
                     last_ckpt = progress
 
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(wall, session))
             wall += bill_session(session, self._price, bd)
             if progress >= job.length_hours:
                 return bd
             # revocation: roll back to the last checkpoint
             bd.revocations += 1
+            if rec.enabled:
+                rec.emit(obs_ev.Revoke(t=wall, market_id=int(m)))
             revoked.add(m)
             progress = last_ckpt
             next_rev = next(rev_iter)
@@ -436,6 +484,7 @@ class Simulator:
     def _run_migration(
         self, job: Job, policy: MigrationPolicy, n_rev: int, start_wall: float
     ) -> Breakdown:
+        rec = obs_current()
         bd = Breakdown()
         rev_points = self._ft_revocation_points(job, n_rev, salt=2)
         wall = start_wall
@@ -454,6 +503,8 @@ class Simulator:
             thr = self._throughput(m)
             session = Session(m, wall)
             session.add("startup", self.ov.startup_hours)
+            if rec.enabled:
+                rec.emit(obs_ev.Provision(t=wall, market_id=int(m), legs=(int(m),)))
             span = min(job.length_hours, next_rev) - progress
             redo = max(0.0, min(max_progress, progress + span) - progress)
             if redo > 0:
@@ -463,16 +514,22 @@ class Simulator:
             max_progress = max(max_progress, progress + span)
             progress += span
             if progress >= job.length_hours:
+                if rec.enabled:
+                    rec.emit(obs_ev.session_billed(wall, session))
                 wall += bill_session(session, self._price, bd)
                 return bd
             # revocation with 2-minute notice
             bd.revocations += 1
+            if rec.enabled:
+                rec.emit(obs_ev.Revoke(t=wall, market_id=int(m)))
             revoked.add(m)
             if mig_ok:
                 session.add("recovery", self.ov.migration_hours(job.memory_gb))
                 # state moves: no lost work
             else:
                 progress = 0.0  # unplanned kill: no FT state to resume from
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(wall, session))
             wall += bill_session(session, self._price, bd)
             next_rev = next(rev_iter)
         raise RuntimeError("migration: exceeded MAX_ATTEMPTS")
@@ -492,6 +549,7 @@ class Simulator:
         of them are placed within the tightest-fitting instance-shape
         class at that class's fastest throughput — the heterogeneous menu
         is a siwoft/portfolio degree of freedom, not a replication one."""
+        rec = obs_current()
         bd = Breakdown()
         totals = self.feats.total_memory_gb
         best_total = totals[totals >= job.memory_gb].min()
@@ -530,21 +588,44 @@ class Simulator:
                 excl.add(m)
                 session = Session(m, start_wall + t0)
                 session.add("startup", self.ov.startup_hours)
+                if rec.enabled:
+                    rec.emit(
+                        obs_ev.Provision(
+                            t=start_wall + t0,
+                            market_id=int(m),
+                            legs=(int(m),),
+                            replica_id=r,
+                        )
+                    )
                 run = min(t1 - t0, wall_len)
                 is_winning_run = r == winner and s_i == len(boundaries) - 2
                 session.add("execution" if is_winning_run else "re_execution", run)
                 if s_i < len(boundaries) - 2:
                     bd.revocations += 1
+                    if rec.enabled:
+                        rec.emit(
+                            obs_ev.Revoke(
+                                t=start_wall + t1, market_id=int(m), replica_id=r
+                            )
+                        )
+                if rec.enabled:
+                    rec.emit(obs_ev.session_billed(start_wall + t0, session))
                 bill_session(session, self._price, bd)
         bd.wall_time = t_star + self.ov.startup_hours
         return bd
 
     # --- on-demand reference ---------------------------------------------
     def _run_on_demand(self, job: Job, start_wall: float) -> Breakdown:
+        rec = obs_current()
         bd = Breakdown()
         price, thr = self._od_choice(job)
         session = Session(-1, start_wall)
         session.add("startup", self.ov.startup_hours)
         session.add("execution", job.wall_hours_on(thr))
+        if rec.enabled:
+            rec.emit(obs_ev.Provision(t=start_wall, market_id=-1, legs=(-1,)))
+            # the constant on-demand price replays via PriceTable.constant —
+            # identical on both engines, whatever _const_price returned
+            rec.emit(obs_ev.session_billed(start_wall, session, price_const=float(price)))
         bill_session(session, self._const_price(price), bd)
         return bd

@@ -44,6 +44,9 @@ from repro.dist import (
 from repro.launch import hlo_cost
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, input_specs
+from repro.obs import get_logger
+
+log = get_logger("launch.dryrun")
 from repro.models.common import abstract_params
 from repro.train.steps import (
     abstract_train_state,
@@ -355,22 +358,22 @@ def main() -> None:
             tag = f"{arch}:{shape} mesh={'2x16x16' if mp else '16x16'} layout={args.layout}"
             try:
                 r = run_cell(arch, shape, multi_pod=mp, layout_name=args.layout)
-                print(
-                    f"OK   {tag}  flops={r['flops']:.3e}  hbm={r['hbm_bytes']:.3e}  "
-                    f"coll={r['collective_wire_bytes']:.3e}  "
-                    f"peak={r.get('peak_bytes_per_device', 0)/2**30:.2f}GiB  "
-                    f"compile={r['compile_seconds']}s"
-                )
+                log.info(f"OK {tag}",
+                         flops=f"{r['flops']:.3e}",
+                         hbm=f"{r['hbm_bytes']:.3e}",
+                         coll=f"{r['collective_wire_bytes']:.3e}",
+                         peak_gib=r.get("peak_bytes_per_device", 0) / 2**30,
+                         compile_s=r["compile_seconds"])
             except Exception as e:  # noqa: BLE001 — report and continue the sweep
                 failures.append((tag, repr(e)))
-                print(f"FAIL {tag}: {e}")
+                log.warn(f"FAIL {tag}", error=repr(e))
                 traceback.print_exc()
     if failures:
-        print(f"\n{len(failures)} failures:")
+        log.warn("dry-run sweep had failures", count=len(failures))
         for t, e in failures:
-            print(" ", t, e)
+            log.warn(f"failed cell {t}", error=e)
         raise SystemExit(1)
-    print("\nall cells compiled")
+    log.info("all cells compiled", count=len(cells) * len(meshes))
 
 
 if __name__ == "__main__":

@@ -26,6 +26,9 @@ from repro.launch.mesh import (
     V5E_ICI_LINK_BW,
     V5E_PEAK_BF16_FLOPS,
 )
+from repro.obs import get_logger
+
+log = get_logger("launch.roofline")
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 CHIPS = {"16x16": 256, "2x16x16": 512}
@@ -159,9 +162,10 @@ def main() -> None:
             )
     worst = min(rows, key=lambda r: r["roofline_fraction"])
     coll = max(rows, key=lambda r: r["t_collective_s"] / max(r["t_compute_s"], 1e-12))
-    print(f"\n# worst roofline fraction: {worst['arch']}:{worst['shape']} "
-          f"({worst['roofline_fraction']:.3f})")
-    print(f"# most collective-bound:   {coll['arch']}:{coll['shape']}")
+    log.info("worst roofline fraction",
+             cell=f"{worst['arch']}:{worst['shape']}",
+             fraction=worst["roofline_fraction"])
+    log.info("most collective-bound", cell=f"{coll['arch']}:{coll['shape']}")
 
 
 if __name__ == "__main__":

@@ -45,7 +45,10 @@ from repro.dist import (
 )
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+from repro.obs import get_logger
 from repro.train.steps import build_decode_step, build_prefill_step
+
+log = get_logger("launch.serve")
 
 
 def _serve_batch(cfg, B, S):
@@ -129,8 +132,8 @@ def engine_plan_main(args) -> None:
     for b in range(B):
         engine.submit(Request(rid=b, prompt=prompts[b],
                               max_new_tokens=args.new_tokens))
-    print(f"plan[0]: {plan.device_count} devices, mesh {plan.mesh_shape} "
-          f"(engine: {B} lanes, {num_pages} pages)")
+    log.info("engine plan up", devices=plan.device_count,
+             mesh=str(plan.mesh_shape), lanes=B, pages=num_pages)
 
     migrated = {"params_bytes": 0, "cache_bytes": 0, "train_path_bytes": 0,
                 "migrated_at": None, "cache_policy": "drop"}
@@ -152,12 +155,11 @@ def engine_plan_main(args) -> None:
             migrated["train_path_bytes"] = assert_params_only(moved, model)
             migrated["migrated_at"] = i
             n_drained = drain_replica(dying, engine)
-            print(
-                f"revoked after step {i}: shed {n_drained} streams, "
-                f"resumed on {plan.device_count} devices, mesh "
-                f"{plan.mesh_shape}; params-only {migrated['params_bytes']} B "
-                f"< train path {migrated['train_path_bytes']} B"
-            )
+            log.info("revoked: streams drained to replacement", step=i,
+                     shed=n_drained, devices=plan.device_count,
+                     mesh=str(plan.mesh_shape),
+                     params_bytes=migrated["params_bytes"],
+                     train_path_bytes=migrated["train_path_bytes"])
         engine.step(params)
         i += 1
 
@@ -219,7 +221,7 @@ def plan_main(args) -> None:
             in_sh["tokens"],
         )
         toks.append(np.asarray(tok))
-    print(f"plan[0]: {plan.device_count} devices, mesh {plan.mesh_shape}")
+    log.info("plan up", devices=plan.device_count, mesh=str(plan.mesh_shape))
 
     i = 0
     while i < args.new_tokens - 1:
@@ -259,12 +261,11 @@ def plan_main(args) -> None:
                 with plan.mesh:
                     _, cache = prefill(params, refill)
             tok = jax.device_put(tok, in_sh["tokens"])
-            print(
-                f"revoked after token {i}: migrated to {plan.device_count} "
-                f"devices, mesh {plan.mesh_shape}; params-only "
-                f"{migrated['params_bytes']} B < train path "
-                f"{migrated['train_path_bytes']} B; cache={args.cache_policy}"
-            )
+            log.info("revoked: migrated to replacement plan", token=i,
+                     devices=plan.device_count, mesh=str(plan.mesh_shape),
+                     params_bytes=migrated["params_bytes"],
+                     train_path_bytes=migrated["train_path_bytes"],
+                     cache_policy=args.cache_policy)
         with plan.mesh:
             t0 = time.perf_counter()
             logits, cache = decode(params, cache, tok, jnp.int32(S + i))
@@ -288,37 +289,8 @@ def plan_main(args) -> None:
     }))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--int8-cache", action="store_true")
-    ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--plan", default="",
-                    help="serve on ElasticMeshManager plans: comma-separated "
-                         "device counts; the second entry is the migration "
-                         "target (e.g. 8,4)")
-    ap.add_argument("--revoke-after", type=int, default=0,
-                    help="decode this many tokens, then revoke + migrate to "
-                         "the second --plan entry")
-    ap.add_argument("--cache-policy", choices=("drop", "migrate"),
-                    default="drop",
-                    help="on migration: drop the KV cache and re-prefill, "
-                         "or reshard it over the DCN")
-    ap.add_argument("--engine", action="store_true",
-                    help="with --plan: serve through the continuous-batching "
-                         "decode engine (paged KV pool) instead of the "
-                         "lock-step dense-cache loop")
-    args = ap.parse_args()
-    if args.plan and args.engine:
-        return engine_plan_main(args)
-    if args.plan:
-        return plan_main(args)
-    if args.engine:
-        raise SystemExit("--engine requires --plan")
-
+def host_main(args) -> None:
+    """The legacy host-mesh path: lock-step batched prefill + decode."""
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     layout = ShardingLayout(int8_kv_cache=args.int8_cache)
@@ -365,8 +337,9 @@ def main() -> None:
         t0 = time.perf_counter()
         logits, cache = prefill(params, batch)
         jax.block_until_ready(logits)
-        print(f"prefill {S} tokens x{B}: {(time.perf_counter()-t0)*1e3:.0f} ms "
-              f"(mesh {dict(mesh.shape)})")
+        log.info("prefill done", tokens=S, batch=B,
+                 ms=round((time.perf_counter() - t0) * 1e3),
+                 mesh=str(dict(mesh.shape)))
 
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         t0 = time.perf_counter()
@@ -377,8 +350,58 @@ def main() -> None:
             toks.append(tok)
         jax.block_until_ready(tok)
     dt = (time.perf_counter() - t0) / max(args.new_tokens - 1, 1)
-    print(f"decode: {dt*1e3:.1f} ms/token (int8_cache={args.int8_cache})")
+    log.info("decode done", ms_per_token=dt * 1e3, int8_cache=args.int8_cache)
     print("first row:", jnp.concatenate(toks, axis=1)[0].tolist())
+
+
+def _dispatch(args) -> None:
+    if args.plan and args.engine:
+        return engine_plan_main(args)
+    if args.plan:
+        return plan_main(args)
+    if args.engine:
+        raise SystemExit("--engine requires --plan")
+    return host_main(args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--int8-cache", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--plan", default="",
+                    help="serve on ElasticMeshManager plans: comma-separated "
+                         "device counts; the second entry is the migration "
+                         "target (e.g. 8,4)")
+    ap.add_argument("--revoke-after", type=int, default=0,
+                    help="decode this many tokens, then revoke + migrate to "
+                         "the second --plan entry")
+    ap.add_argument("--cache-policy", choices=("drop", "migrate"),
+                    default="drop",
+                    help="on migration: drop the KV cache and re-prefill, "
+                         "or reshard it over the DCN")
+    ap.add_argument("--engine", action="store_true",
+                    help="with --plan: serve through the continuous-batching "
+                         "decode engine (paged KV pool) instead of the "
+                         "lock-step dense-cache loop")
+    ap.add_argument("--trace", default="",
+                    help="record the structured event timeline to this JSONL "
+                         "path (replay with python -m repro.obs.replay, "
+                         "render with python -m repro.obs.export)")
+    args = ap.parse_args()
+    if args.trace:
+        from repro.obs.export import write_jsonl
+        from repro.obs.recorder import recording
+
+        with recording() as rec:
+            _dispatch(args)
+        log.info("trace written", path=args.trace,
+                 events=write_jsonl(args.trace, rec.events))
+        return
+    _dispatch(args)
 
 
 if __name__ == "__main__":

@@ -20,8 +20,51 @@ from repro.core.orchestrator import SpotTrainingOrchestrator
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+from repro.obs import get_logger
 from repro.train.loop import run_segment
 from repro.train.steps import init_train_state
+
+log = get_logger("launch.train")
+
+
+def _run(args) -> None:
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=min(20, args.steps // 10 + 1))
+    log.info("launching", arch=cfg.name,
+             params_m=model.param_count() / 1e6, mode=args.spot_mode)
+
+    if args.spot_mode == "none":
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+        state = init_train_state(model, jax.random.key(args.seed))
+        res = run_segment(
+            model, state, ds, mesh, tc, ShardingLayout(),
+            num_steps=args.steps, ckpt=ckpt, ckpt_every=50,
+        )
+        if ckpt:
+            ckpt.close()
+        log.info("training done",
+                 loss_first=res.losses[0], loss_last=res.losses[-1],
+                 mean_step_ms=sum(res.step_seconds) / len(res.step_seconds) * 1e3)
+        return
+
+    ms = generate_markets(seed=3, n_hours=24 * 90 + 24 * 30)
+    hist, fut = split_history_future(ms, 24 * 90)
+    with tempfile.TemporaryDirectory() as d:
+        orch = SpotTrainingOrchestrator(
+            model, ds, mesh, hist, fut, mode=args.spot_mode, tc=tc,
+            segment_steps=max(args.steps // 5, 1), steps_per_trace_hour=200,
+            ckpt_dir=args.ckpt_dir or d, ckpt_every=10, seed=args.seed,
+        )
+        rep = orch.run(args.steps)
+    log.info("spot training done", useful=rep.useful_steps,
+             wasted=rep.wasted_steps, revocations=rep.revocations,
+             goodput=rep.goodput, cost_dollars=rep.cost_dollars,
+             loss_first=rep.losses[0], loss_last=rep.losses[-1])
 
 
 def main() -> None:
@@ -35,42 +78,20 @@ def main() -> None:
                     choices=["none", "siwoft", "checkpoint", "hybrid"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="record the structured event timeline to this JSONL "
+                         "path (replay with python -m repro.obs.replay)")
     args = ap.parse_args()
+    if args.trace:
+        from repro.obs.export import write_jsonl
+        from repro.obs.recorder import recording
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
-    mesh = make_host_mesh()
-    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
-    tc = TrainConfig(total_steps=args.steps, warmup_steps=min(20, args.steps // 10 + 1))
-    print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M mode={args.spot_mode}")
-
-    if args.spot_mode == "none":
-        ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
-        state = init_train_state(model, jax.random.key(args.seed))
-        res = run_segment(
-            model, state, ds, mesh, tc, ShardingLayout(),
-            num_steps=args.steps, ckpt=ckpt, ckpt_every=50,
-        )
-        if ckpt:
-            ckpt.close()
-        print(f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}; "
-              f"mean step {sum(res.step_seconds)/len(res.step_seconds)*1e3:.0f} ms")
+        with recording() as rec:
+            _run(args)
+        log.info("trace written", path=args.trace,
+                 events=write_jsonl(args.trace, rec.events))
         return
-
-    ms = generate_markets(seed=3, n_hours=24 * 90 + 24 * 30)
-    hist, fut = split_history_future(ms, 24 * 90)
-    with tempfile.TemporaryDirectory() as d:
-        orch = SpotTrainingOrchestrator(
-            model, ds, mesh, hist, fut, mode=args.spot_mode, tc=tc,
-            segment_steps=max(args.steps // 5, 1), steps_per_trace_hour=200,
-            ckpt_dir=args.ckpt_dir or d, ckpt_every=10, seed=args.seed,
-        )
-        rep = orch.run(args.steps)
-    print(f"useful={rep.useful_steps} wasted={rep.wasted_steps} revs={rep.revocations} "
-          f"goodput={rep.goodput:.2f} cost=${rep.cost_dollars:.4f} "
-          f"loss {rep.losses[0]:.4f} -> {rep.losses[-1]:.4f}")
+    _run(args)
 
 
 if __name__ == "__main__":

@@ -37,6 +37,9 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, List, Sequence, Tuple
 
+from repro.obs import events as obs_ev
+from repro.obs.recorder import current as obs_current
+
 if TYPE_CHECKING:  # pragma: no cover
     from repro.serve.engine import DecodeEngine
 
@@ -181,4 +184,7 @@ def drain_replica(src: "DecodeEngine", dst: "DecodeEngine") -> int:
     resumed = src.shed()
     for req in resumed:
         dst.submit(req)
+    rec = obs_current()
+    if rec.enabled:
+        rec.emit(obs_ev.Drain(t=float(src.steps), moved_requests=len(resumed)))
     return len(resumed)

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import PAGE_SIZE
+from repro.obs import events as obs_ev
+from repro.obs.recorder import current as obs_current
 
 
 @dataclasses.dataclass
@@ -122,6 +124,7 @@ class DecodeEngine:
         self.decoded_tokens = 0
         self.decode_seconds = 0.0
         self.prefilled_tokens = 0
+        self.steps = 0                      # lane-event trace clock
 
         self._int8 = layout.int8_kv_cache
         self._free_pages = deque(range(num_pages - 1))  # last page = trash
@@ -181,6 +184,19 @@ class DecodeEngine:
         if not self._lanes:
             return 0.0
         return sum(l is not None for l in self._lanes) / len(self._lanes)
+
+    @property
+    def page_pool_used_frac(self) -> float:
+        """Fraction of *allocatable* pool pages currently reserved by live
+        lanes. The trash page is excluded from the denominator: it is never
+        allocated, so a fully drained engine reads exactly 0.0."""
+        allocatable = self.num_pages - 1
+        return 1.0 - len(self._free_pages) / allocatable
+
+    def _sample_gauges(self, rec) -> None:
+        t = float(self.steps)
+        rec.gauge("engine.occupancy", t, self.occupancy)
+        rec.gauge("engine.page_pool_used_frac", t, self.page_pool_used_frac)
 
     @property
     def measured_tokens_per_sec(self) -> float:
@@ -263,6 +279,13 @@ class DecodeEngine:
             rid=req.rid, prompt=req.prompt, max_new_tokens=req.max_new_tokens,
             pages=pages, seq_len=length, current=current, generated=generated,
         )
+        rec = obs_current()
+        if rec.enabled:
+            rec.emit(obs_ev.Admit(
+                t=float(self.steps), request_id=int(req.rid),
+                lane=lane, pages_reserved=len(pages),
+            ))
+            self._sample_gauges(rec)
         self._maybe_finish(lane)
 
     # -- stepping -----------------------------------------------------------
@@ -282,14 +305,28 @@ class DecodeEngine:
         self._free_pages.extend(lane.pages)
         self._done.append(Completion(lane.rid, lane.generated, reason))
         self._lanes[lane_idx] = None
+        rec = obs_current()
+        if rec.enabled:
+            rec.emit(obs_ev.Evict(
+                t=float(self.steps), request_id=int(lane.rid),
+                lane=lane_idx, reason=reason,
+            ))
+            self._sample_gauges(rec)
 
     def shed(self) -> List[Request]:
         """Evict every active lane and drain the queue (spot revocation):
         returns the resumable requests, committed tokens included."""
+        rec = obs_current()
         out: List[Request] = []
         for i, lane in enumerate(self._lanes):
             if lane is None:
                 continue
+            if rec.enabled:
+                rec.emit(obs_ev.Shed(
+                    t=float(self.steps), request_id=int(lane.rid), lane=i,
+                    prompt_tokens=len(lane.prompt),
+                    resume_tokens=len(lane.generated),
+                ))
             out.append(Request(
                 rid=lane.rid, prompt=lane.prompt,
                 max_new_tokens=lane.max_new_tokens,
@@ -305,6 +342,7 @@ class DecodeEngine:
         """Admit what fits, advance every active lane one token. Returns
         completions finished by this call."""
         self._params = params
+        self.steps += 1
         done_before = len(self._done)
         self._admit()
         active = [i for i, l in enumerate(self._lanes) if l is not None]

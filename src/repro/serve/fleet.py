@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.core import provisioner as alg
 from repro.core.accounting import Breakdown, PriceTable, Session, bill_session
+from repro.obs import events as obs_ev
+from repro.obs.recorder import current as obs_current
 from repro.core.allocation import Allocation
 from repro.core.market import MarketSet, next_revocation_table, shape_throughput
 from repro.core.policies import Job, OverheadModel, SiwoftPolicy
@@ -545,6 +547,17 @@ class FleetSimulator:
         if self.sizing == "auto":
             return self._run_auto(hours, rate_tokens_per_sec)
         wl, policy, ov = self.workload, self.policy, self.ov
+        rec = obs_current()
+        if rec.enabled:
+            rec.emit(
+                obs_ev.RunStart(
+                    t=0.0,
+                    subsystem="fleet",
+                    label=f"{self.mode}/static",
+                    horizon_hours=float(hours),
+                )
+            )
+            rec.emit(obs_ev.price_trace(0.0, self.future.prices))
         bd = Breakdown()
         price = PriceTable(self.future.prices)
         if self.mode == "fleet":
@@ -602,6 +615,19 @@ class FleetSimulator:
                 else self._rate_correction(rep.allocation)
             )
             rate = rep.tokens_per_sec * corr
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.Provision(
+                        t=at,
+                        market_id=int(rep.allocation.legs[0].market),
+                        legs=tuple(int(m) for m in rep.allocation.markets),
+                        replica_id=int(rep.replica_id),
+                        rate_tokens_per_sec=rate,
+                    )
+                )
+                if mig is not None:
+                    rec.emit(obs_ev.ReshardStart(t=at, bytes_moved=int(mig.moved_bytes)))
+                    rec.emit(obs_ev.ReshardDone(t=at + mig.wire_hours, hours=mig.wire_hours))
             live.append(
                 (dataclasses.replace(rep, tokens_per_sec=rate), at, at + delay, s)
             )
@@ -626,10 +652,20 @@ class FleetSimulator:
             rep, t0, t_live, session = live.pop(i)
             revocations += 1
             revoked.add(rev_market)
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.Revoke(
+                        t=float(h),
+                        market_id=int(rev_market),
+                        replica_id=int(rep.replica_id),
+                    )
+                )
             # the dead replica served until the revocation hour; its
             # tenure ends there and its own cycles settle (whole-hour
             # billing per spot request — same proxy as the batch paper)
             session.add("execution", max(h - t0 - session.used_hours, 0.0))
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(float(h), session))
             bill_session(session, price, bd)
             # capacity leaves when the replica dies — or never arrives, if
             # it died mid-startup (the -delta lands on the +delta's time)
@@ -686,6 +722,8 @@ class FleetSimulator:
         # -- drain to the end of the window, settle every open session ---
         for _rep, t0, _, session in live:
             session.add("execution", max(hours - t0 - session.used_hours, 0.0))
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(float(hours), session))
             bill_session(session, price, bd)
 
         # prefix-sum the sorted deltas into the absolute-capacity timeline
@@ -705,6 +743,9 @@ class FleetSimulator:
         stats.merge_into(bd)
         bd.revocations = revocations
         bd.wall_time = float(hours)
+        if rec.enabled:
+            rec.emit(obs_ev.breakdown_pin(float(hours), bd))
+            rec.emit(obs_ev.RunEnd(t=float(hours), wall_hours=float(hours)))
         return FleetReport(
             breakdown=bd,
             router=stats,
@@ -743,6 +784,17 @@ class FleetSimulator:
         the engine-level form, token-identical by the shed→resume pin).
         """
         wl, policy, ov = self.workload, self.policy, self.ov
+        rec = obs_current()
+        if rec.enabled:
+            rec.emit(
+                obs_ev.RunStart(
+                    t=0.0,
+                    subsystem="fleet",
+                    label=f"{self.mode}/auto",
+                    horizon_hours=float(hours),
+                )
+            )
+            rec.emit(obs_ev.price_trace(0.0, self.future.prices))
         bd = Breakdown()
         price = PriceTable(self.future.prices)
         scaler = AutoScaler(
@@ -777,12 +829,27 @@ class FleetSimulator:
             next_id += 1
             n_provisioned += 1
             markets_used.extend(rep.allocation.markets)
+            if rec.enabled:
+                rec.emit(
+                    obs_ev.Provision(
+                        t=at,
+                        market_id=int(rep.allocation.legs[0].market),
+                        legs=tuple(int(m) for m in rep.allocation.markets),
+                        replica_id=int(rep.replica_id),
+                        rate_tokens_per_sec=rep.tokens_per_sec,
+                    )
+                )
+                if mig is not None:
+                    rec.emit(obs_ev.ReshardStart(t=at, bytes_moved=int(mig.moved_bytes)))
+                    rec.emit(obs_ev.ReshardDone(t=at + mig.wire_hours, hours=mig.wire_hours))
             live.append((rep, at, at + delay, s))
             cap_deltas.append((at + delay, rep.tokens_per_sec))
 
         def settle_replica(idx: int, at: float) -> Replica:
             rep, t0, t_live, session = live.pop(idx)
             session.add("execution", max(at - t0 - session.used_hours, 0.0))
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(at, session))
             bill_session(session, price, bd)
             # capacity leaves at the decision instant — or never arrives,
             # if the replica dies mid-startup
@@ -871,6 +938,14 @@ class FleetSimulator:
                 rep = live[i][0]
                 hit = [m for m in rep.allocation.markets if m in revoking]
                 if hit:
+                    if rec.enabled:
+                        rec.emit(
+                            obs_ev.Revoke(
+                                t=now,
+                                market_id=int(hit[0]),
+                                replica_id=int(rep.replica_id),
+                            )
+                        )
                     settle_replica(i, now)
                     revocations += 1
                     revoked.update(hit)
@@ -879,24 +954,56 @@ class FleetSimulator:
                 float(offered[min(h, offered.size - 1)]) if offered.size else 0.0
             )
             fc = scaler.forecast(rate_tokens_per_sec, h)
+            live_rates = [r.tokens_per_sec for r, _, _, _ in live]
             decision = scaler.decide(
                 now,
-                [r.tokens_per_sec for r, _, _, _ in live],
+                live_rates,
                 forecast=fc,
                 offered_now=offered_now,
             )
+            if rec.enabled:
+                # the scaler's full input vector, so a trace answers "what
+                # did it see when it scaled" without rerunning the fleet
+                rec.emit(
+                    obs_ev.ScaleDecision(
+                        t=now,
+                        kind=decision.kind,
+                        offered_tokens_per_sec=offered_now,
+                        forecast_tokens_per_sec=fc,
+                        capacity_tokens_per_sec=sum(live_rates),
+                        target_tokens_per_sec=decision.target_tokens_per_sec,
+                    )
+                )
             if decision.kind == "up":
                 # demand-driven repair and ramp scale-up are the same
                 # move: add capacity until the bars clear again
+                n_before = len(live)
                 grew = scale_up(
                     now, decision.target_tokens_per_sec, revoking
                 )
                 if grew:
+                    if rec.enabled:
+                        rec.emit(
+                            obs_ev.ScaleUp(
+                                t=now,
+                                added=len(live) - n_before,
+                                target_tokens_per_sec=decision.target_tokens_per_sec,
+                            )
+                        )
                     if revoking:
                         repairs += 1
                     scaler.record(now, "up")
             elif decision.kind == "down":
+                n_before = len(live)
                 if scale_down(now, decision.target_tokens_per_sec):
+                    if rec.enabled:
+                        rec.emit(
+                            obs_ev.ScaleDown(
+                                t=now,
+                                retired=n_before - len(live),
+                                target_tokens_per_sec=decision.target_tokens_per_sec,
+                            )
+                        )
                     scaler.record(now, "down")
             peak_capacity = max(
                 peak_capacity, sum(r.tokens_per_sec for r, _, _, _ in live)
@@ -905,6 +1012,8 @@ class FleetSimulator:
         # drain to the end of the window, settle every open session
         for _rep, t0, _, session in live:
             session.add("execution", max(hours - t0 - session.used_hours, 0.0))
+            if rec.enabled:
+                rec.emit(obs_ev.session_billed(float(hours), session))
             bill_session(session, price, bd)
 
         cap_events: List[CapacityEvent] = [CapacityEvent(0.0, 0.0)]
@@ -923,6 +1032,9 @@ class FleetSimulator:
         stats.merge_into(bd)
         bd.revocations = revocations
         bd.wall_time = float(hours)
+        if rec.enabled:
+            rec.emit(obs_ev.breakdown_pin(float(hours), bd))
+            rec.emit(obs_ev.RunEnd(t=float(hours), wall_hours=float(hours)))
         return FleetReport(
             breakdown=bd,
             router=stats,
@@ -981,13 +1093,34 @@ def on_demand_reference(
     rate = replica_rate(workload, feats, alloc)
     target = workload.target_tokens_per_sec * policy.capacity_headroom
     k = max(int(math.ceil(target / max(rate, 1e-9))), 1)
+    rec = obs_current()
+    if rec.enabled:
+        rec.emit(
+            obs_ev.RunStart(
+                t=0.0,
+                subsystem="fleet",
+                label="on_demand",
+                horizon_hours=float(hours),
+            )
+        )
     bd = Breakdown()
     od_price = float(feats.on_demand[best])
     od_table = PriceTable.constant(od_price)
-    for _ in range(k):
+    for i in range(k):
         s = Session(best, 0.0)
         s.add("startup", overheads.startup_hours)
         s.add("execution", max(hours - overheads.startup_hours, 0.0))
+        if rec.enabled:
+            rec.emit(
+                obs_ev.Provision(
+                    t=0.0,
+                    market_id=int(best),
+                    legs=(int(best),),
+                    replica_id=i,
+                    rate_tokens_per_sec=rate,
+                )
+            )
+            rec.emit(obs_ev.session_billed(0.0, s, price_const=od_price))
         bill_session(s, od_table, bd)
     cap_events = [
         CapacityEvent(0.0, 0.0),
@@ -1002,6 +1135,9 @@ def on_demand_reference(
     )
     stats.merge_into(bd)
     bd.wall_time = float(hours)
+    if rec.enabled:
+        rec.emit(obs_ev.breakdown_pin(float(hours), bd))
+        rec.emit(obs_ev.RunEnd(t=float(hours), wall_hours=float(hours)))
     return FleetReport(
         breakdown=bd,
         router=stats,

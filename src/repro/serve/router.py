@@ -55,6 +55,8 @@ import numpy as np
 
 from repro.core.accounting import Breakdown
 from repro.core.units import SECONDS_PER_HOUR
+from repro.obs import events as obs_ev
+from repro.obs.recorder import current as obs_current
 
 
 @dataclasses.dataclass
@@ -280,6 +282,7 @@ def route_trace(
     cap_i = 0
     stats = RouterStats()
     q = 0.0
+    rec = obs_current()
     for t0, t1 in zip(marks, marks[1:]):
         if t1 <= t0:
             continue
@@ -294,6 +297,13 @@ def route_trace(
             max_delay_seconds=max_delay_seconds,
             shed_delay_seconds=shed_delay_seconds,
         )
+        if rec.enabled:
+            # one event per closed-form interval: replay re-folds these
+            # through RouterStats.add in the same order, so the merged
+            # totals land on the Breakdown bit-exactly
+            rec.emit(obs_ev.router_interval(t0, t0, t1, s))
+            if s.slo_violation_seconds > 0.0:
+                rec.emit(obs_ev.SloViolation(t=t0, seconds=s.slo_violation_seconds))
         stats.add(s)
     return stats
 

@@ -1,0 +1,8 @@
+"""O001: untyped dict events bypass the frozen registry schema."""
+
+
+def run(rec, wall, market):
+    if rec.enabled:
+        rec.emit({"type": "provision", "t": wall, "market_id": market})
+        rec.emit(dict(type="revoke", t=wall, market_id=market))
+        rec.emit({k: v for k, v in [("type", "run_end"), ("t", wall)]})

@@ -1,0 +1,7 @@
+"""O002: stdout is machine-owned; human status goes to the stderr logger."""
+
+
+def run(bd, wall):
+    print("billing hour", wall)
+    print(f"cost so far: {sum(bd.cost.values()):.4f}")
+    return wall + 1.0

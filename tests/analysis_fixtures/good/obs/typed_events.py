@@ -1,0 +1,15 @@
+"""Clean instrumentation: typed events, guarded emission, stderr logging."""
+from repro.obs import events as obs_ev
+from repro.obs import get_logger
+from repro.obs.recorder import current as obs_current
+
+log = get_logger("fixture")
+
+
+def run(session, wall, market):
+    rec = obs_current()
+    if rec.enabled:
+        rec.emit(obs_ev.Provision(t=wall, market_id=market, legs=(market,)))
+        rec.emit(obs_ev.session_billed(wall, session))
+    log.info("hour billed", wall=wall, market=market)
+    return wall + 1.0

@@ -113,6 +113,72 @@ def test_engine_scale_down_drain_token_identical(served):
     assert {c.rid for c in survivor.completions} == {0, 1, 2}
 
 
+def test_engine_occupancy_and_page_pool_under_drain(served):
+    """The drain telemetry triple: before a scale-down the retiring engine
+    holds lanes and pages, during the drain every shed event carries
+    enough to re-prefill the stream elsewhere, and after it both gauges
+    read exactly zero — with the recorded gauge series agreeing with the
+    engine properties at every sample."""
+    from repro.obs import events as E
+    from repro.obs.recorder import recording
+    from repro.serve import drain_replica
+
+    cfg, model, layout, mesh, params, reqs, *_ = served
+    with recording() as rec:
+        retiring = DecodeEngine(
+            model, layout, mesh, lanes=2, num_pages=9, max_context=48
+        )
+        survivor = DecodeEngine(
+            model, layout, mesh, lanes=2, num_pages=9, max_context=48
+        )
+        for r in reqs[:2]:
+            retiring.submit(r)
+        for _ in range(3):
+            retiring.step(params)
+
+        # before: both lanes live, pages reserved up front for both streams
+        assert retiring.occupancy == 1.0
+        assert retiring.page_pool_used_frac > 0.0
+        occ_before = retiring.occupancy
+        pool_before = retiring.page_pool_used_frac
+
+        moved = drain_replica(retiring, survivor)
+        assert moved == 2
+
+        # after: the retiring engine is empty on BOTH axes — every lane
+        # free and every reserved page back in the pool
+        assert retiring.occupancy == 0.0
+        assert retiring.page_pool_used_frac == 0.0
+
+    sheds = [e for e in rec.events if isinstance(e, E.Shed)]
+    evicts = [e for e in rec.events if isinstance(e, E.Evict)]
+    drains = [e for e in rec.events if isinstance(e, E.Drain)]
+    assert len(sheds) == 2 and len(drains) == 1
+    assert drains[0].moved_requests == 2
+    assert all(e.reason == "shed" for e in evicts)
+    # during: each shed event carries what re-prefilling needs — the
+    # prompt length and the committed tokens (prompt + resume[:-1] is the
+    # re-prefill; resume[-1] rides the next decode step)
+    by_rid = {r.rid: r for r in reqs}
+    for s in sheds:
+        assert s.prompt_tokens == len(by_rid[s.request_id].prompt)
+        # prefill's argmax token + one per decode step
+        assert s.resume_tokens == 4
+        total = s.prompt_tokens + s.resume_tokens + by_rid[s.request_id].max_new_tokens
+        assert total <= 48  # re-prefill still fits the survivor's context
+
+    # the gauge series brackets the drain: a sample at admission matching
+    # the pre-drain properties, and a final sample at zero/zero
+    occ = rec.gauge_series["engine.occupancy"]
+    pool = rec.gauge_series["engine.page_pool_used_frac"]
+    assert occ[0][1] == 0.5 and occ[-1][1] == 0.0
+    # second sample: both streams admitted — matches the pre-drain state
+    assert (occ[1][1], pool[1][1]) == (occ_before, pool_before)
+    assert pool[-1][1] == 0.0
+    assert rec.gauge_values["engine.occupancy"] == 0.0
+    assert rec.gauge_values["engine.page_pool_used_frac"] == 0.0
+
+
 def test_engine_occupancy_tracks_live_lanes(served):
     cfg, model, layout, mesh, params, reqs, *_ = served
     eng = DecodeEngine(model, layout, mesh, lanes=2, num_pages=9, max_context=48)

@@ -17,6 +17,7 @@ from tools.analysis.core import (  # noqa: E402
     run_analysis,
 )
 from tools.analysis.determinism import DeterminismPass  # noqa: E402
+from tools.analysis.obs import ObsPass  # noqa: E402
 from tools.analysis.pallas import PallasPass  # noqa: E402
 from tools.analysis.perf import PerfPass  # noqa: E402
 from tools.analysis.shardspec import ShardSpecPass  # noqa: E402
@@ -239,6 +240,41 @@ def test_perf_suppressed_oracles_keep_real_tree_clean():
     assert any(d.rule == "V001" for d in raw), (
         "expected the scalar oracles in market.py to trip V001 pre-suppression"
     )
+
+
+# ---------------------------------------------------------------------------
+# obs (O001–O002)
+# ---------------------------------------------------------------------------
+
+def test_obs_bad_fixtures_fire_exactly_their_rule():
+    cases = {
+        "adhoc_dict.py": ("O001", 3),
+        "bare_print.py": ("O002", 2),
+    }
+    for name, (rule, count) in cases.items():
+        diags = run_pass(ObsPass(), [FIX / "bad" / "obs" / name])
+        assert rules_of(diags) == {rule}, (name, diags)
+        assert len(diags) == count, (name, diags)
+
+
+def test_obs_good_fixture_accepted():
+    diags = run_pass(ObsPass(), [FIX / "good" / "obs" / "typed_events.py"])
+    assert diags == []
+
+
+def test_obs_scope_is_core_serve_dist():
+    p = ObsPass()
+    for mod in (
+        "src/repro/core/orchestrator.py",
+        "src/repro/serve/engine.py",
+        "src/repro/dist/elastic.py",
+    ):
+        assert p.applies_to(Path(mod)), mod
+    # the logger itself writes to stderr via print; launchers own stdout
+    # contracts (PLAN_JSON / CSV); benches print CSV rows — all exempt
+    assert not p.applies_to(Path("src/repro/obs/log.py"))
+    assert not p.applies_to(Path("src/repro/launch/serve.py"))
+    assert not p.applies_to(Path("benchmarks/serve_bench.py"))
 
 
 # ---------------------------------------------------------------------------

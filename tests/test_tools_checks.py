@@ -26,11 +26,26 @@ def test_check_bench_rejects_malformed_json(tmp_path, capsys):
     assert "invalid JSON" in capsys.readouterr().err
 
 
-def test_check_bench_unknown_name_uses_generic_fallback(tmp_path):
+def test_check_bench_unknown_name_uses_generic_fallback(tmp_path, capsys):
     # an object with dense monotonic scenario ids passes the fallback ...
     good = {"bench": "novel", "scenarios": [{"id": 0}, {"id": 1}, {"id": 2}]}
     (tmp_path / "BENCH_novel.json").write_text(json.dumps(good), encoding="utf-8")
     assert check_bench.main(tmp_path) == 0
+    # ... but never silently: the unvalidated file is warned about
+    assert "unvalidated bench" in capsys.readouterr().err
+
+
+def test_check_bench_strict_fails_unvalidated_files(tmp_path, capsys):
+    good = {"bench": "novel", "scenarios": [{"id": 0}]}
+    (tmp_path / "BENCH_novel.json").write_text(json.dumps(good), encoding="utf-8")
+    assert check_bench.main(tmp_path, strict=True) == 1
+    err = capsys.readouterr().err
+    assert "unvalidated bench" in err and "ERROR" in err
+
+
+def test_check_bench_strict_passes_known_files():
+    # every committed bench has a registered checker, so strict == default
+    assert check_bench.main(strict=True) == 0
 
 
 def test_check_bench_generic_rejects_non_object_and_bad_ids(tmp_path, capsys):

@@ -137,6 +137,7 @@ def collect_py_files(paths: Iterable[Path]) -> List[Path]:
 def all_passes() -> List[Pass]:
     from tools.analysis.conservation import ConservationPass
     from tools.analysis.determinism import DeterminismPass
+    from tools.analysis.obs import ObsPass
     from tools.analysis.pallas import PallasPass
     from tools.analysis.perf import PerfPass
     from tools.analysis.shardspec import ShardSpecPass
@@ -149,6 +150,7 @@ def all_passes() -> List[Pass]:
         PallasPass(),
         ShardSpecPass(),
         PerfPass(),
+        ObsPass(),
     ]
 
 

@@ -1,0 +1,90 @@
+"""Pass 7 — observability lint (O001–O002).
+
+The event telemetry layer (``src/repro/obs``) only stays replayable if
+the instrumented subsystems keep two disciplines. Under
+``src/repro/{core,serve,dist}``:
+
+* **O001** — ad-hoc dict events: ``emit({...})`` / ``emit(dict(...))``.
+  Every emitted event must be a registry-typed dataclass from
+  ``repro.obs.events`` (a ``CamelCase`` constructor or one of the
+  module's snake_case factory helpers) — an untyped dict bypasses the
+  frozen schema, breaks the JSONL round trip, and is invisible to the
+  replay oracle.
+* **O002** — bare ``print(`` in the instrumented core: stdout belongs to
+  machine contracts (CSV rows, ``PLAN_JSON``/``SPLIT_JSON`` lines) and
+  human status belongs to the structured stderr logger
+  (``repro.obs.log.get_logger``). A stray print in core/serve/dist is
+  either debugging residue or an event that should be in the timeline.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Sequence
+
+from tools.analysis.core import Diagnostic, Pass, SourceFile
+
+
+def _is_dictish(node: ast.expr) -> bool:
+    """A dict literal, a ``dict(...)`` call, or a dict comprehension."""
+    if isinstance(node, (ast.Dict, ast.DictComp)):
+        return True
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id == "dict"
+    )
+
+
+class ObsPass(Pass):
+    name = "obs"
+    rules = {
+        "O001": "ad-hoc dict event passed to emit() — events must be "
+                "registry-typed dataclasses from repro.obs.events",
+        "O002": "bare print() in instrumented core — use the structured "
+                "stderr logger (repro.obs.log) or a typed event",
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = path.parts
+        if "analysis_fixtures" in parts:
+            return "obs" in parts
+        return (
+            len(parts) >= 3
+            and parts[:2] == ("src", "repro")
+            and parts[2] in ("core", "serve", "dist")
+        )
+
+    def run(self, files: Sequence[SourceFile], root: Path) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for f in files:
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if (
+                    isinstance(func, ast.Attribute)
+                    and func.attr == "emit"
+                    and node.args
+                    and _is_dictish(node.args[0])
+                ):
+                    diags.append(
+                        self.diag(
+                            f, node, "O001",
+                            "ad-hoc dict event passed to emit()",
+                            "construct a typed event from repro.obs.events "
+                            "so the frozen schema and the replay oracle "
+                            "see it",
+                        )
+                    )
+                elif isinstance(func, ast.Name) and func.id == "print":
+                    diags.append(
+                        self.diag(
+                            f, node, "O002",
+                            "bare print() in instrumented core",
+                            "route human status through "
+                            "repro.obs.log.get_logger(...) (stderr); "
+                            "stdout is machine-owned",
+                        )
+                    )
+        return diags

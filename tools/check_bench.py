@@ -13,10 +13,17 @@ checks, per file:
 * any OTHER ``BENCH_*.json`` — must at least be a JSON object, and if it
   has a ``scenarios`` list, the ids must be monotonic.
 
+An unknown ``BENCH_*.json`` (no dedicated checker) only gets the generic
+shape check — effectively unvalidated. That used to pass silently, which
+is exactly how a new bench's trajectory starts rotting; now every such
+file is warned about, and ``--strict`` turns the warning into a failure
+so CI can insist that each committed bench has a real schema.
+
 Exit 0 on success; prints each violation and exits 1 otherwise.
 """
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 import sys
@@ -280,8 +287,9 @@ CHECKERS = {
 }
 
 
-def main(root: Path = REPO) -> int:
+def main(root: Path = REPO, strict: bool = False) -> int:
     errors: list = []
+    warnings: list = []
     found = sorted(root.glob("BENCH_*.json"))
     if not found:
         errors.append("no BENCH_*.json found at the repo root")
@@ -292,10 +300,20 @@ def main(root: Path = REPO) -> int:
         except json.JSONDecodeError as e:
             errors.append(f"{name}: invalid JSON ({e})")
             continue
+        if name not in CHECKERS:
+            warnings.append(
+                f"{name}: unvalidated bench (no schema checker registered — "
+                f"add one to tools/check_bench.py CHECKERS)"
+            )
         CHECKERS.get(name, check_generic)(errors, name, data)
         if isinstance(data, dict):
             check_breakdowns(errors, name, data)
 
+    if strict:
+        errors.extend(warnings)
+    else:
+        for w in warnings:
+            print(f"WARNING: {w}", file=sys.stderr)
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     print(f"checked {len(found)} bench file(s); {len(errors)} problem(s)")
@@ -303,4 +321,8 @@ def main(root: Path = REPO) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on unvalidated BENCH_*.json files (no "
+                         "registered schema checker), not just warn")
+    sys.exit(main(strict=ap.parse_args().strict))

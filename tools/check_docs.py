@@ -24,6 +24,7 @@ REQUIRED = [
     "docs/invariants.md",
     "docs/kernels.md",
     "docs/simulator-perf.md",
+    "docs/observability.md",
 ]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "results", ".claude"}
